@@ -1,0 +1,57 @@
+"""Collective-bytes accounting per scheme × TP degree (the paper's Figure
+5-8 mechanism, measured exactly from lowered HLO rather than wall time).
+
+The paper's claim: the Naive Algorithm's AllGather cost grows with rank
+count while TP-Aware pays only the (unavoidable) trailing AllReduce —
+hence speedup grows with TP.  Here the two schemes' per-device ICI bytes
+are parsed from the compiled shard_map program; their ratio is the
+communication-side speedup upper bound.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import PAPER_PROBLEMS
+from repro.core import reorder, schemes
+from repro.launch import roofline
+
+from benchmarks.bench_mlp import _mesh, _plan, _collective_bytes
+
+
+def run(out_lines: list):
+    print("# bench_comm: per-device ICI bytes by scheme (M=8)")
+    header = ("problem,TP,scheme,allgather_B,allreduce_B,total_B,"
+              "vs_tpaware")
+    print(header)
+    out_lines.append(header)
+    m = 8
+    for pname, (k1, n1, n2) in PAPER_PROBLEMS.items():
+        plans = {s: _plan(k1, n1, n2, s)
+                 for s in ("naive-actorder", "exllama", "tp-aware")}
+        for tp in (2, 4, 8):
+            if tp > len(jax.devices()):
+                continue
+            mesh = _mesh(tp)
+            x = jax.random.normal(jax.random.PRNGKey(1), (m, k1))
+            res = {}
+            for scheme, pp in plans.items():
+                with mesh:
+                    fn = lambda xx, p: schemes.pair_forward_tp(
+                        xx, p, mesh, activation=None,
+                        compute_dtype=jnp.float32)
+                    coll = _collective_bytes(fn, (x, pp), mesh)
+                res[scheme] = coll
+            base = res["tp-aware"]["total_per_device"]
+            for scheme, coll in res.items():
+                line = (f"{pname},{tp},{scheme},{coll['all-gather']:.0f},"
+                        f"{coll['all-reduce']:.0f},"
+                        f"{coll['total_per_device']:.0f},"
+                        f"{coll['total_per_device'] / max(base, 1):.2f}")
+                print(line)
+                out_lines.append(line)
+
+
+if __name__ == "__main__":
+    run([])

@@ -1,0 +1,65 @@
+"""Beyond-paper: head-block-constrained attention V->O fold.
+
+Measures (a) the communication the fold removes — the AllGather between
+the V projection and out_proj that the paper declares out of scope — and
+(b) the quantization-error cost of constraining act_order to head blocks
+(block-constrained sorting is weaker than global sorting).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention_fold as af, quantization as qz
+from repro.launch import roofline
+
+
+def run(out_lines: list):
+    print("# bench_fold: attention V->O fold (beyond paper)")
+    header = "metric,config,value"
+    print(header)
+    out_lines.append(header)
+
+    # (a) communication removed: the exllama-style V->O path would
+    # AllGather the (M, H*hd) attention output before out_proj; the folded
+    # path needs none.  Bytes per device for Llama-70B-ish attention:
+    for (h, hd, m, tp) in [(64, 128, 8, 8), (64, 128, 16, 4)]:
+        gathered = m * h * hd * 4 * (tp - 1) / tp
+        line = f"allgather_removed_B,(H={h} hd={hd} M={m} TP={tp}),{gathered:.0f}"
+        print(line)
+        out_lines.append(line)
+
+    # (b) quantization-error cost of the block constraint
+    rng = jax.random.PRNGKey(0)
+    h, kv, hd, d = 16, 4, 64, 512
+    r = jax.random.split(rng, 3)
+    w_o = jax.random.normal(r[0], (h * hd, d)) * jnp.exp(
+        jax.random.normal(r[1], (h * hd, 1)) * 0.5)   # skewed row scales
+    imp = jnp.abs(jax.random.normal(r[2], (h * hd,))) + \
+        jnp.abs(w_o).mean(axis=1)
+
+    # group_size < head_dim so intra-block sorting can regroup rows
+    # (at gs == head_dim every block IS one group and sorting is a no-op)
+    gs = hd // 4
+    # global act_order (paper Alg. 1, not TP-foldable for attention)
+    q_global = qz.quantize(w_o, gs, act_order=True, importance=imp)
+    # block-constrained act_order (foldable)
+    order, _ = af.constrained_row_order(imp, n_heads=h, n_kv_heads=kv,
+                                        head_dim=hd)
+    q_block = qz.quantize(w_o, gs, act_order=True, proc_order=order)
+    # no act_order at all
+    q_none = qz.quantize(w_o, gs, act_order=False)
+
+    for name, qr in (("global_actorder", q_global),
+                     ("block_constrained", q_block),
+                     ("no_actorder", q_none)):
+        err = float(jnp.mean(jnp.abs(w_o - qz.dequantize(qr.naive))))
+        line = f"quant_mae,{name},{err:.6f}"
+        print(line)
+        out_lines.append(line)
+
+
+if __name__ == "__main__":
+    run([])

@@ -1,0 +1,71 @@
+"""Deployment-quality ablation: eval loss of a trained model, dense vs
+int4-quantized under each deployment scheme.
+
+Validates the premise the paper builds on: (a) int4 group quantization
+costs little eval loss, and (b) the three deployment layouts are
+quality-identical (same arithmetic) — so the scheme choice is purely a
+latency/communication decision, which is the paper's whole point.
+GPTQ error-feedback vs plain RTN is ablated at the pair level in
+`tests/test_quantization.py` (needs per-layer calibration Hessians).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.common import REPLICATED
+from repro.models.registry import build_model
+from repro.quant.gptq import quantize_model
+from repro.train import data as data_lib, optimizer as opt, trainstep
+
+
+def run(out_lines: list):
+    print("# bench_quality: eval loss, dense vs int4 deployment schemes")
+    header = "config,eval_loss,delta_vs_dense"
+    print(header)
+    out_lines.append(header)
+
+    cfg = get_smoke_config("granite-3-8b").with_quant(mode="none")
+    model = build_model(cfg)
+    state = trainstep.init_train_state(model, jax.random.PRNGKey(0))
+    ocfg = opt.AdamWConfig(lr=1e-3, total_steps=150, warmup_steps=10)
+    step = jax.jit(trainstep.make_train_step(model, REPLICATED, ocfg),
+                   donate_argnums=0)
+    dcfg = data_lib.DataConfig(seq_len=64, global_batch=8,
+                               vocab_size=cfg.vocab_size)
+    it = data_lib.batches(dcfg)
+    for _ in range(150):
+        state, metrics = step(state, next(it))
+
+    eval_cfg = data_lib.DataConfig(seq_len=64, global_batch=8,
+                                   vocab_size=cfg.vocab_size, seed=999)
+    eval_batches = []
+    eit = data_lib.batches(eval_cfg)
+    for _ in range(4):
+        eval_batches.append(next(eit))
+
+    def eval_loss(m, params):
+        tot = 0.0
+        for b in eval_batches:
+            tot += float(trainstep.loss_fn(m, params, b, REPLICATED))
+        return tot / len(eval_batches)
+
+    dense_loss = eval_loss(model, state["params"])
+    line = f"dense,{dense_loss:.4f},0.0000"
+    print(line)
+    out_lines.append(line)
+
+    for scheme in ("naive-actorder", "exllama", "tp-aware"):
+        qcfg = cfg.with_quant(mode="mlp", scheme=scheme)
+        qparams = quantize_model(qcfg, state["params"],
+                                 rng=jax.random.PRNGKey(7))
+        ql = eval_loss(build_model(qcfg), qparams)
+        line = f"int4-{scheme},{ql:.4f},{ql - dense_loss:+.4f}"
+        print(line)
+        out_lines.append(line)
+
+
+if __name__ == "__main__":
+    run([])

@@ -1,0 +1,51 @@
+import os
+# TP benchmarks need multiple host devices (8, like the paper's 8-GPU node).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Benchmark harness: one module per paper table/figure group.
+
+  PYTHONPATH=src python -m benchmarks.run [--only mlp|comm|kernels|fold]
+
+Writes a CSV transcript to results/bench.csv as well as stdout.
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["mlp", "comm", "kernels", "fold", "quality"])
+    ap.add_argument("--out", default="results/bench.csv")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_comm, bench_fold, bench_kernels,
+                            bench_mlp, bench_quality)
+
+    suites = {
+        "mlp": bench_mlp.run,        # paper Tables 1-28
+        "comm": bench_comm.run,      # collective-bytes accounting
+        "kernels": bench_kernels.run,  # Alg.-1 locality (ExllamaV2 kernel)
+        "fold": bench_fold.run,      # beyond-paper attention fold
+        "quality": bench_quality.run,  # int4 deployment quality ablation
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    lines: list = []
+    for name, fn in suites.items():
+        print(f"\n=== {name} ===")
+        lines.append(f"=== {name} ===")
+        fn(lines)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("\n".join(str(l) for l in lines) + "\n")
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: the paper's three deployment schemes on one MLP pair.
+
+Shows the whole story in ~60 lines:
+  1. quantize a (gate/up -> down) pair with act_order (GPTQ Eq. 3),
+  2. deploy it under naive-actorder / exllama / tp-aware layouts,
+  3. verify all three compute the same function,
+  4. count the collectives each one needs under tensor parallelism.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import reorder, schemes
+from repro.launch import roofline
+
+K1, N1, N2, M, TP = 512, 1024, 512, 8, 4
+
+rng = jax.random.PRNGKey(0)
+r = jax.random.split(rng, 4)
+w_gate = jax.random.normal(r[0], (K1, N1)) * 0.02
+w_up = jax.random.normal(r[1], (K1, N1)) * 0.02
+w_down = jax.random.normal(r[2], (N1, N2)) * 0.02
+x = jax.random.normal(r[3], (M, K1))
+
+print(f"MLP pair: ({K1}, {N1}) -> ({N1}, {N2}), batch {M}, TP={TP}\n")
+
+mesh = jax.make_mesh((len(jax.devices()) // TP, TP), ("data", "model"))
+outs = {}
+for scheme in ("naive-actorder", "exllama", "tp-aware"):
+    # offline: quantize int4 (group 128, act_order) + lay out for `scheme`
+    pp = reorder.plan_pair(w_up, w_down, w_gate=w_gate, scheme=scheme,
+                           group_size_up=128, group_size_down=128, rng=rng)
+    # online: tensor-parallel forward with explicit collectives
+    with mesh:
+        fn = lambda xx, p=pp: schemes.pair_forward_tp(
+            xx, p, mesh, activation="silu")
+        y = jax.jit(fn)(x)
+        hlo = jax.jit(fn).lower(x).compile().as_text()
+    outs[scheme] = np.asarray(y)
+    coll = roofline.parse_collective_bytes(hlo, chips=mesh.devices.size)
+    print(f"{scheme:15s} collectives: "
+          + ", ".join(f"{k}={v}" for k, v in coll["counts"].items() if v)
+          + f"  ({roofline.fmt_bytes(coll['total_per_device'])}/device)")
+
+print("\nmax |tp-aware - naive| =",
+      np.abs(outs["tp-aware"] - outs["naive-actorder"]).max(),
+      "(same arithmetic, different layout/communication)")
+print("max |exllama  - naive| =",
+      np.abs(outs["exllama"] - outs["naive-actorder"]).max())

@@ -1,0 +1,63 @@
+"""Config registry: ``get_config(arch_id)`` / ``get_smoke_config(arch_id)``.
+
+Also exports the paper's own MLP problem sizes (Llama-70B / Granite-20B)
+used by the benchmark harness.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES, InputShape, ModelConfig, QuantConfig, smoke_reduce)
+
+ARCH_IDS = (
+    "llama-3.2-vision-90b",
+    "qwen3-moe-235b-a22b",
+    "qwen3-4b",
+    "mistral-large-123b",
+    "whisper-large-v3",
+    "starcoder2-3b",
+    "recurrentgemma-2b",
+    "rwkv6-3b",
+    "arctic-480b",
+    "granite-3-8b",
+)
+
+_MODULES = {
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "qwen3-4b": "qwen3_4b",
+    "mistral-large-123b": "mistral_large_123b",
+    "whisper-large-v3": "whisper_large_v3",
+    "starcoder2-3b": "starcoder2_3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "rwkv6-3b": "rwkv6_3b",
+    "arctic-480b": "arctic_480b",
+    "granite-3-8b": "granite_3_8b",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.smoke_config()
+
+
+# ---------------------------------------------------------------------------
+# the paper's own MLP problem sizes (benchmarks/)
+# ---------------------------------------------------------------------------
+
+PAPER_PROBLEMS = {
+    # name: (K1, N1, N2) — up_proj (K1,N1) then down_proj (N1,N2)
+    "llama-70b": (8192, 28672, 8192),
+    "granite-20b": (6144, 24576, 6144),
+}
+PAPER_BATCH_SIZES = (1, 2, 4, 8, 16)
+PAPER_TP_SETTINGS = (1, 2, 4, 8)

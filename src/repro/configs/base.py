@@ -1,0 +1,205 @@
+"""Config system: architectures, input shapes, parallelism, quantization.
+
+Every assigned architecture gets one ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` (the exact full-size config, citation in ``source``) and
+``smoke_config()`` (a reduced same-family variant: <=2 layers,
+d_model<=512, <=4 experts) used by the CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# quantization / deployment scheme
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    mode: str = "mlp"            # "none" | "mlp" (MLP/FFN pairs quantized)
+    scheme: str = "tp-aware"     # "naive-actorder" | "exllama" | "tp-aware"
+    group_size: int = 128
+    act_order: bool = True
+    attn_tp_aware: bool = False  # beyond-paper head-block-constrained fold
+    # Row-TP shards of the down projection must be quant-group aligned
+    # (paper Sec 2.1 deployment assumption): group size is chosen to tile
+    # d_ff / tp_groups so an up-to-tp_groups-way model axis always gets
+    # whole groups per shard.
+    tp_groups: int = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                  # dense | moe | hybrid | ssm | audio | vlm
+    source: str                  # citation (hf model card / arXiv)
+
+    num_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    norm_type: str = "rms"       # "rms" | "layernorm"
+    use_rope: bool = True
+    norm_eps: float = 1e-5
+    attention_window: Optional[int] = None   # sliding-window decode variant
+    causal: bool = True
+
+    # MLP details
+    activation: str = "silu"
+    mlp_gated: bool = True
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    moe_dff: int = 0
+    dense_residual: bool = False   # arctic: dense MLP in parallel with MoE
+    capacity_factor: float = 1.25
+
+    # hybrid (recurrentgemma): pattern of 2 recurrent : 1 local-attn
+    lru_width: Optional[int] = None
+    conv_width: int = 4
+    local_window: int = 2048
+
+    # ssm (rwkv6)
+    rwkv_head_dim: int = 64
+
+    # audio (whisper): encoder stack + stub frame embeddings
+    encoder_layers: int = 0
+    encoder_seq: int = 1500        # mel frames after conv (stub input)
+    max_target_positions: int = 0
+
+    # vlm (llama-3.2-vision): cross-attn every Nth layer, stub patch embeds
+    cross_attn_every: int = 0
+    vision_tokens: int = 1601      # ViT patch embeds incl CLS (stub input)
+
+    quant: QuantConfig = QuantConfig()
+    dtype: str = "bfloat16"
+
+    # Deployment head padding: when set to the model-axis size, the
+    # (kv, group) head grid is zero-padded so the padded head count shards
+    # the axis exactly (GSPMD otherwise pads *implicitly*, emitting
+    # pathological collective-permute chains -- measured; DESIGN.md Sec 4).
+    # Padded heads are zero-initialized; wo's padded rows are zero, so the
+    # function computed is exactly the logical architecture's.
+    attn_tp_pad: Optional[int] = None
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def padded_vocab(self) -> int:
+        """Deployment vocab padding: round up to the TP degree so the
+        embedding/lm_head shard the model axis exactly (padded logit
+        columns are masked to -1e30 in lm_head — exact softmax).  Active
+        only when ``attn_tp_pad`` (the deployment TP degree) is set."""
+        if not self.attn_tp_pad or self.vocab_size % self.attn_tp_pad == 0:
+            return self.vocab_size
+        tp = self.attn_tp_pad
+        return (self.vocab_size + tp - 1) // tp * tp
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def with_quant(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(
+            self, quant=dataclasses.replace(self.quant, **kw))
+
+    # ---- roofline helpers -------------------------------------------------
+    def param_count(self) -> int:
+        """Approximate total parameter count N (for MODEL_FLOPS = 6ND)."""
+        d, l = self.d_model, self.num_layers
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        if self.family == "ssm":
+            attn = d * d * 4  # r,k,v,o time-mix projections
+        mlp = d * self.d_ff * (3 if self.mlp_gated else 2)
+        moe = 0
+        if self.num_experts:
+            moe = self.num_experts * d * self.moe_dff * (
+                3 if self.mlp_gated else 2) + d * self.num_experts
+            if not self.dense_residual:
+                mlp = 0
+        emb = self.vocab_size * d * 2
+        enc = 0
+        if self.encoder_layers:
+            enc = self.encoder_layers * (attn + mlp)
+        return l * (attn + mlp + moe) + emb + enc
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        d, l = self.d_model, self.num_layers
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        if self.family == "ssm":
+            attn = d * d * 4
+        mlp = d * self.d_ff * (3 if self.mlp_gated else 2)
+        moe = 0
+        if self.num_experts:
+            moe = self.top_k * d * self.moe_dff * (
+                3 if self.mlp_gated else 2) + d * self.num_experts
+            if not self.dense_residual:
+                mlp = 0
+        emb = self.vocab_size * d  # lm head matmul is active
+        return l * (attn + mlp + moe) + emb
+
+
+def smoke_reduce(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests."""
+    kw = dict(
+        num_layers=2,
+        d_model=256,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+    )
+    if cfg.num_experts:
+        kw.update(num_experts=4, top_k=min(cfg.top_k, 2), moe_dff=128)
+    if cfg.lru_width:
+        kw.update(lru_width=256, local_window=64)
+    if cfg.encoder_layers:
+        kw.update(encoder_layers=2, encoder_seq=32, max_target_positions=128)
+    if cfg.cross_attn_every:
+        kw.update(cross_attn_every=2, vision_tokens=16)
+    if cfg.attention_window:
+        kw.update(attention_window=64)
+    kw.update(overrides)
+    new = cfg.with_(**kw)
+    # group size must tile the reduced dims
+    from repro.core.quantization import choose_group_size
+    gs = choose_group_size(min(new.d_ff if not new.num_experts else new.moe_dff,
+                               new.d_model, 128), 64)
+    return new.with_quant(group_size=gs)

@@ -1,0 +1,130 @@
+"""Beyond-paper: head-block-constrained TP-aware folding for attention.
+
+The paper (§2.2) restricts its fold to MLP pairs: "the sharding strategy
+for Attention ... motivates the need for additional tricks".  This module
+implements those tricks for the V-projection -> out-projection pair.
+
+Why head blocks: the attention output channel ``c = (h, j)`` (query head
+``h``, channel ``j``) is produced from V channel ``(h // g, j)`` of KV head
+``h // g`` (GQA group size ``g = n_heads / n_kv_heads``).  Attention mixes
+*tokens*, never channels, so any per-KV-head channel permutation ``π_kv``
+commutes with attention exactly:
+
+    attn(q, k, v[..., π]) == attn(q, k, v)[..., π]        (per head block)
+
+Therefore an act_order permutation of W_o's rows is foldable into W_v's
+columns **iff** it is (a) identical across the query heads of one KV group
+and (b) confined to each head's ``head_dim`` block.  Under head-sharded TP
+the blocks never cross rank boundaries, so — exactly like the paper's MLP
+fold — the AllGather between V and out_proj disappears.
+
+The cost of the constraint: act_order can only sort within blocks, so the
+quantization-error win is smaller than unconstrained act_order — that
+trade-off is measured in ``benchmarks/bench_attention_fold.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qz
+from repro.core.reorder import PlannedPair
+
+
+def constrained_row_order(importance_o: jax.Array, *, n_heads: int,
+                          n_kv_heads: int, head_dim: int
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Block-constrained descending-importance order for W_o's rows.
+
+    ``importance_o``: (n_heads * head_dim,) per-row importance.
+    Returns (proc_order (K2,), pi (n_kv_heads, head_dim)) where
+    ``proc_order[h*hd + j] = h*hd + pi[h // g, j]``.
+    """
+    g = n_heads // n_kv_heads
+    imp = importance_o.reshape(n_kv_heads, g, head_dim)
+    imp_kv = jnp.mean(imp, axis=1)                       # (kv, hd)
+    pi = jnp.argsort(-imp_kv, axis=1).astype(jnp.int32)  # per-KV-head order
+    base = (jnp.arange(n_heads, dtype=jnp.int32) * head_dim)[:, None]
+    pi_per_q = pi[jnp.arange(n_heads) // g]              # (H, hd)
+    return (base + pi_per_q).reshape(-1), pi
+
+
+def plan_attention_vo(
+    w_v: jax.Array,                 # (d_model, n_kv_heads * head_dim)
+    w_o: jax.Array,                 # (n_heads * head_dim, d_model)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    group_size: int = 128,
+    importance_o: Optional[jax.Array] = None,
+    rng: Optional[jax.Array] = None,
+) -> PlannedPair:
+    """TP-aware plan for the V -> out_proj pair (scheme "tp-aware").
+
+    The returned pair runs through ``schemes.pair_forward_tp`` unchanged —
+    with attention applied between the two GEMMs by the caller (see
+    ``attention_vo_reference``).  ``p2`` holds the block-constrained row
+    order of W_o; W_v's columns are folded by the per-KV-head ``π``.
+    """
+    k2 = n_heads * head_dim
+    if w_o.shape[0] != k2:
+        raise ValueError(f"w_o rows {w_o.shape[0]} != H*hd {k2}")
+    if head_dim % group_size and group_size % head_dim:
+        raise ValueError(
+            f"group_size {group_size} must tile head_dim {head_dim} so "
+            "quant groups never cross foldable blocks")
+
+    if importance_o is None:
+        key = rng if rng is not None else jax.random.PRNGKey(0)
+        importance_o = jax.random.uniform(key, (k2,))
+
+    proc_order, pi = constrained_row_order(
+        importance_o, n_heads=n_heads, n_kv_heads=n_kv_heads,
+        head_dim=head_dim)
+
+    gs_o = qz.choose_group_size(min(head_dim, k2), group_size)
+    gs_v = qz.choose_group_size(w_v.shape[0], group_size)
+
+    q_o = qz.quantize(w_o, gs_o, act_order=True, proc_order=proc_order)
+    q_v = qz.quantize(w_v, gs_v, act_order=True, rng=rng)
+
+    # fold: permute W_v's columns by π within each KV-head block, so the
+    # attention output lands pre-aligned with W_o's sorted rows.
+    kv_fold = (jnp.arange(n_kv_heads, dtype=jnp.int32)[:, None] * head_dim
+               + pi).reshape(-1)
+    v_folded = qz.permute_columns(q_v.ordered, kv_fold)
+
+    return PlannedPair(
+        up=v_folded, gate=None, down=q_o.ordered,
+        p1_up=q_v.perm, p1_gate=None, p2=q_o.perm,
+        scheme="tp-aware")
+
+
+def attention_vo_reference(x, q_heads, attn_weights, pp: PlannedPair, *,
+                           n_heads: int, n_kv_heads: int, head_dim: int,
+                           compute_dtype=jnp.float32) -> jax.Array:
+    """Reference forward: X -> V -> attention-mix -> out_proj, folded plan.
+
+    ``attn_weights``: (B, H, S, T) softmaxed scores (already computed from
+    Q/K — V-channel permutations cannot affect them).  Used by the
+    exactness tests; the serving path fuses this into the model's
+    attention.
+    """
+    from repro.core import schemes
+
+    g = n_heads // n_kv_heads
+    xin = jnp.take(x, pp.p1_up, axis=-1) if pp.p1_up is not None else x
+    v = schemes.qmatmul(xin, pp.up, compute_dtype=compute_dtype)
+    b, t, _ = v.shape
+    v = v.reshape(b, t, n_kv_heads, head_dim)
+    # out[b, s, h] = sum_t attn[b, h, s, t] * v[b, t, h // g]
+    out = jnp.einsum("bhst,bthd->bshd",
+                     attn_weights.astype(compute_dtype),
+                     jnp.repeat(v, g, axis=2))
+    out = out.reshape(b, -1, n_heads * head_dim)
+    return schemes.qmatmul(out, pp.down, compute_dtype=compute_dtype)

@@ -1,0 +1,205 @@
+"""Offline reordering plans — paper Algorithm 1 and the TP-aware fold.
+
+Everything in this module runs *offline* (at model-preparation time): it
+consumes raw fp weights, quantizes them, and emits a ``PlannedMLP`` /
+``PlannedPair`` pytree in the exact layout each deployment scheme wants, so
+the runtime schemes in ``schemes.py`` contain no layout logic.
+
+Schemes (names used across the repo):
+
+* ``naive-actorder`` — Eq. 3 deployment: original row order + unordered
+  ``g_idx`` gather.  No activation permutes, no extra collectives, but poor
+  metadata locality.
+* ``exllama`` — Algorithm 1 layout (rows sorted by group).  This is the
+  paper's **Naive Algorithm** (Algorithm 2) under TP: needs
+  AllGather -> global permute by P2 -> chunk between the column-TP and
+  row-TP layers.
+* ``tp-aware`` — Algorithm 3: additionally permutes the *columns* of the
+  column-TP weight(s) by P2 offline, eliminating the AllGather/permute/chunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qz
+from repro.core.quantization import QuantizedLinear
+
+SCHEMES = ("naive-actorder", "exllama", "tp-aware")
+
+
+def reorder(g_idx: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Paper Algorithm 1: P = argsort(g_idx); returns (P, g_idx[P])."""
+    p = jnp.argsort(g_idx, stable=True).astype(jnp.int32)
+    return p, g_idx[p]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlannedPair:
+    """A column-TP -> row-TP quantized GEMM pair, deployment-ready.
+
+    Covers the paper's MLP case (up -> down) and, beyond paper, any
+    K1->N1->N2 pair (e.g. RWKV channel-mix K->V).  ``gate`` is the optional
+    second column-TP matrix of a SwiGLU pair sharing the same P2 fold.
+    """
+
+    up: QuantizedLinear                    # (K1, N1) column-TP layer
+    gate: Optional[QuantizedLinear]        # optional (K1, N1) SwiGLU gate
+    down: QuantizedLinear                  # (N1, N2) row-TP layer
+    p1_up: Optional[jax.Array]             # (K1,) X-gather perm (None: naive)
+    p1_gate: Optional[jax.Array]
+    p2: Optional[jax.Array]                # (N1,) down-rows perm
+    scheme: str = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def k1(self) -> int:
+        return self.up.k
+
+    @property
+    def n1(self) -> int:
+        return self.up.n
+
+    @property
+    def n2(self) -> int:
+        return self.down.n
+
+
+def plan_pair(
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    w_gate: Optional[jax.Array] = None,
+    scheme: str = "tp-aware",
+    group_size_up: int = 128,
+    group_size_down: int = 128,
+    act_order: bool = True,
+    rng: Optional[jax.Array] = None,
+    importance_up: Optional[jax.Array] = None,
+    importance_down: Optional[jax.Array] = None,
+    hessian_up: Optional[jax.Array] = None,
+    hessian_down: Optional[jax.Array] = None,
+    use_gptq: bool = False,
+    share_p1: bool = True,
+) -> PlannedPair:
+    """Quantize + lay out a GEMM pair for the requested deployment scheme.
+
+    ``share_p1`` (beyond-paper): quantize the gate with the *up* matrix's
+    processing order.  Importance is a property of the shared input
+    channels, so one order serves both — the runtime then performs ONE
+    ``X[:, P1]`` gather instead of two (see ``pair_forward_*``).
+    """
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}, expected one of {SCHEMES}")
+    k1, n1 = w_up.shape
+    n1_d, n2 = w_down.shape
+    if n1_d != n1:
+        raise ValueError(f"pair mismatch: up is {w_up.shape}, down is {w_down.shape}")
+    if w_gate is not None and w_gate.shape != (k1, n1):
+        raise ValueError(f"gate shape {w_gate.shape} != up shape {(k1, n1)}")
+
+    rngs = (jax.random.split(rng, 3) if rng is not None else (None,) * 3)
+
+    q_up = qz.quantize(w_up, group_size_up, act_order, importance=importance_up,
+                       hessian=hessian_up, use_gptq=use_gptq, rng=rngs[0])
+    q_down = qz.quantize(w_down, group_size_down, act_order,
+                         importance=importance_down, hessian=hessian_down,
+                         use_gptq=use_gptq, rng=rngs[1])
+    q_gate = None
+    if w_gate is not None:
+        if share_p1:
+            q_gate = qz.quantize(w_gate, group_size_up, act_order,
+                                 hessian=hessian_up, use_gptq=use_gptq,
+                                 proc_order=q_up.perm)
+        else:
+            q_gate = qz.quantize(w_gate, group_size_up, act_order,
+                                 hessian=hessian_up, use_gptq=use_gptq,
+                                 rng=rngs[2])
+
+    if scheme == "naive-actorder":
+        return PlannedPair(
+            up=q_up.naive, gate=(q_gate.naive if q_gate else None),
+            down=q_down.naive,
+            p1_up=None, p1_gate=None, p2=None, scheme=scheme)
+
+    p2 = q_down.perm                     # (N1,) — down's row sort (Alg. 1)
+    up = q_up.ordered
+    gate = q_gate.ordered if q_gate else None
+    if scheme == "tp-aware":
+        # Algorithm 3 fold: permute the column-TP layer's columns by P2 so
+        # local Y1 shards come out pre-aligned with down's sorted rows.
+        up = qz.permute_columns(up, p2)
+        if gate is not None:
+            gate = qz.permute_columns(gate, p2)
+
+    return PlannedPair(
+        up=up, gate=gate, down=q_down.ordered,
+        p1_up=q_up.perm,
+        # None marks "shares p1_up" — the runtime reuses the one gather
+        p1_gate=(None if (q_gate is None or share_p1) else q_gate.perm),
+        p2=p2, scheme=scheme)
+
+
+# ---------------------------------------------------------------------------
+# TP sharding of a plan (offline, host-side) — used by tests/benchmarks that
+# drive shard_map with explicitly pre-sharded pytrees, and by the serving
+# pipeline when materializing per-rank weights.
+# ---------------------------------------------------------------------------
+
+def shard_pair(pp: PlannedPair, tp: int) -> list[PlannedPair]:
+    """Split a planned pair into ``tp`` per-rank plans.
+
+    Column-TP layers split along N1 (qweight dim 1, metadata dim 1); the
+    row-TP layer splits along N1 == its K (qweight dim 0 / 8, metadata groups
+    dim 0).  Requires N1 % tp == 0 and (for the row layer) group-aligned
+    shards: (N1 // tp) % group_size_down == 0.
+    """
+    n1 = pp.n1
+    if n1 % tp:
+        raise ValueError(f"N1={n1} not divisible by tp={tp}")
+    shard = n1 // tp
+    gs_d = pp.down.group_size
+    if shard % qz.PACK:
+        raise ValueError(
+            f"row-TP shard {shard} must be a multiple of the int4 packing "
+            f"factor {qz.PACK}")
+    if shard % gs_d:
+        raise ValueError(
+            f"row-TP shard {shard} not aligned to down group_size {gs_d}; "
+            f"re-plan with group_size_down={qz.choose_group_size(shard, gs_d)}")
+
+    def col_slice(ql: QuantizedLinear, r: int) -> QuantizedLinear:
+        sl = slice(r * shard, (r + 1) * shard)
+        return dataclasses.replace(
+            ql, qweight=ql.qweight[:, sl], scales=ql.scales[:, sl],
+            zeros=ql.zeros[:, sl])
+
+    def row_slice(ql: QuantizedLinear, r: int) -> QuantizedLinear:
+        ksl = slice(r * shard // qz.PACK, (r + 1) * shard // qz.PACK)
+        if ql.kind == "naive":
+            # Unordered layout: a row shard touches arbitrary groups, so the
+            # metadata table stays replicated and g_idx keeps global ids —
+            # this *is* the locality problem the paper describes.
+            return dataclasses.replace(
+                ql, qweight=ql.qweight[ksl],
+                g_idx=ql.g_idx[r * shard:(r + 1) * shard])
+        gsl = slice(r * (shard // gs_d), (r + 1) * (shard // gs_d))
+        return dataclasses.replace(
+            ql, qweight=ql.qweight[ksl], scales=ql.scales[gsl],
+            zeros=ql.zeros[gsl])
+
+    out = []
+    for r in range(tp):
+        p2_local = pp.p2[r * shard:(r + 1) * shard] if pp.p2 is not None else None
+        out.append(PlannedPair(
+            up=col_slice(pp.up, r),
+            gate=(col_slice(pp.gate, r) if pp.gate is not None else None),
+            down=row_slice(pp.down, r),
+            p1_up=pp.p1_up, p1_gate=pp.p1_gate,  # replicated
+            p2=p2_local,
+            scheme=pp.scheme))
+    return out

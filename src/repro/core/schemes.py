@@ -1,0 +1,244 @@
+"""Runtime dequant-GEMM deployment schemes (paper Algorithms 2 and 3).
+
+Three schemes, one arithmetic result (property-tested):
+
+* ``naive-actorder`` — unordered Eq.-3 metadata gather.  TP: no extra
+  collectives (chunks align naturally) but poor metadata locality.
+* ``exllama`` — Algorithm-1 sorted layout.  TP (**paper's "Naive
+  Algorithm"**, Algorithm 2): AllGather Y1 -> permute by P2 -> chunk.
+* ``tp-aware`` — Algorithm 3: the P2 fold happened offline, so the TP path
+  is GEMM -> GEMM -> AllReduce.  Strictly fewer collectives.
+
+All functions are shape-polymorphic over leading batch dims: ``x`` is
+``(..., K1)``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import quantization as qz
+from repro.core.quantization import QuantizedLinear
+from repro.core.reorder import PlannedPair
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "silu": _silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "relu": jax.nn.relu,
+    "identity": lambda x: x,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def qmatmul(x: jax.Array, ql: QuantizedLinear, *, backend: str = "jnp",
+            compute_dtype=jnp.float32) -> jax.Array:
+    """``x @ dequantize(ql)`` via the selected backend.
+
+    ``backend="jnp"`` materializes the fp weight (XLA fuses the dequant into
+    the GEMM epilogue on TPU; it is also what the dry-run lowers so
+    cost_analysis sees real FLOPs/bytes).  ``backend="pallas"`` calls the
+    fused Pallas kernel (TPU hot path; interpret=True on CPU).
+    """
+    if backend == "pallas":
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        return ops.dequant_matmul(x, ql, compute_dtype=compute_dtype)
+    w = qz.dequantize(ql, dtype=compute_dtype)
+    return jnp.matmul(x.astype(compute_dtype), w)
+
+
+# ---------------------------------------------------------------------------
+# single-device reference forwards
+# ---------------------------------------------------------------------------
+
+def pair_forward_reference(
+    x: jax.Array,
+    pp: PlannedPair,
+    *,
+    activation: Optional[str] = None,
+    compute_dtype=jnp.float32,
+    backend: str = "jnp",
+) -> jax.Array:
+    """Single-device forward of a planned pair; ground truth for TP tests."""
+    act = ACTIVATIONS[activation or "identity"]
+    mm = functools.partial(qmatmul, backend=backend, compute_dtype=compute_dtype)
+
+    if pp.scheme == "naive-actorder":
+        y1 = mm(x, pp.up)
+        if pp.gate is not None:
+            y1 = act(mm(x, pp.gate)) * y1
+        elif activation:
+            y1 = act(y1)
+        return mm(y1, pp.down)
+
+    # exllama & tp-aware share the column-TP step: gather X by P1 first.
+    xg = jnp.take(x, pp.p1_up, axis=-1)
+    y1 = mm(xg, pp.up)
+    if pp.gate is not None:
+        # p1_gate None => gate shares p1_up (one gather, used twice)
+        g = act(mm(xg if pp.p1_gate is None
+                   else jnp.take(x, pp.p1_gate, axis=-1), pp.gate))
+        y1 = g * y1
+    elif activation:
+        y1 = act(y1)
+    if pp.scheme == "exllama":
+        y1 = jnp.take(y1, pp.p2, axis=-1)   # runtime P2 permute (Alg. 2 l.3)
+    # tp-aware: columns were folded by P2 offline — nothing to do.
+    return mm(y1, pp.down)
+
+
+# ---------------------------------------------------------------------------
+# TP forwards (explicit collectives under shard_map)
+# ---------------------------------------------------------------------------
+
+def pair_pspecs(pp: PlannedPair, axis: str, x_batch_axes=()) -> PlannedPair:
+    """PartitionSpec pytree matching ``pp`` for the model-TP axis ``axis``."""
+    col = P(None, axis)
+
+    def col_specs(ql: QuantizedLinear) -> QuantizedLinear:
+        import dataclasses
+        return dataclasses.replace(
+            ql, qweight=col, scales=col, zeros=col,
+            g_idx=(P(None) if ql.g_idx is not None else None))
+
+    def row_specs(ql: QuantizedLinear) -> QuantizedLinear:
+        import dataclasses
+        if ql.kind == "naive":
+            return dataclasses.replace(
+                ql, qweight=P(axis, None), scales=P(None, None),
+                zeros=P(None, None), g_idx=P(axis))
+        return dataclasses.replace(
+            ql, qweight=P(axis, None), scales=P(axis, None),
+            zeros=P(axis, None), g_idx=None)
+
+    import dataclasses
+    return dataclasses.replace(
+        pp,
+        up=col_specs(pp.up),
+        gate=(col_specs(pp.gate) if pp.gate is not None else None),
+        down=row_specs(pp.down),
+        p1_up=(P(None) if pp.p1_up is not None else None),
+        p1_gate=(P(None) if pp.p1_gate is not None else None),
+        p2=(P(axis) if pp.p2 is not None else None),
+    )
+
+
+def _pair_local_forward(
+    x: jax.Array,
+    pp: PlannedPair,
+    *,
+    axis: str,
+    activation: Optional[str],
+    compute_dtype,
+    backend: str,
+    reduce: str,
+    reduce_dtype=None,
+) -> jax.Array:
+    """Per-rank body executed under shard_map.
+
+    ``x`` is the local batch shard, replicated along ``axis``; the planned
+    pair holds this rank's weight shards (column shards for up/gate, row
+    shard for down, local P2 chunk for exllama).
+    """
+    act = ACTIVATIONS[activation or "identity"]
+    mm = functools.partial(qmatmul, backend=backend, compute_dtype=compute_dtype)
+
+    if pp.scheme == "naive-actorder":
+        # Original-order columns: local Y1 chunk already feeds the matching
+        # down row-shard.  Comm: final AllReduce only.  (Slow metadata path.)
+        y1 = mm(x, pp.up)
+        if pp.gate is not None:
+            y1 = act(mm(x, pp.gate)) * y1
+        elif activation:
+            y1 = act(y1)
+        y2 = mm(y1, pp.down)
+    elif pp.scheme == "exllama":
+        # Paper Algorithm 2 (the "Naive Algorithm" under TP).
+        xg = jnp.take(x, pp.p1_up, axis=-1)
+        y1 = mm(xg, pp.up)                                       # l.1 GEMM
+        if pp.gate is not None:
+            g = act(mm(xg if pp.p1_gate is None
+                       else jnp.take(x, pp.p1_gate, axis=-1), pp.gate))
+            y1 = g * y1
+        elif activation:
+            y1 = act(y1)
+        y1_full = jax.lax.all_gather(y1, axis, axis=-1, tiled=True)  # l.2
+        y1_mine = jnp.take(y1_full, pp.p2, axis=-1)       # l.3+l.4 fused:
+        # local P2 chunk both permutes and chunks the gathered tensor.
+        y2 = mm(y1_mine, pp.down)                                # l.5 GEMM
+    elif pp.scheme == "tp-aware":
+        # Paper Algorithm 3: offline fold removed the gather entirely.
+        xg = jnp.take(x, pp.p1_up, axis=-1)
+        y1 = mm(xg, pp.up)                                       # l.1 GEMM
+        if pp.gate is not None:
+            g = act(mm(xg if pp.p1_gate is None
+                       else jnp.take(x, pp.p1_gate, axis=-1), pp.gate))
+            y1 = g * y1
+        elif activation:
+            y1 = act(y1)
+        y2 = mm(y1, pp.down)                                     # l.2 GEMM
+    else:
+        raise ValueError(f"unknown scheme {pp.scheme!r}")
+
+    if reduce_dtype is not None:
+        # beyond-paper: collective in bf16 — halves ICI bytes of the
+        # trailing all-reduce; the f32 partial sums are already complete
+        # per-rank, so only the cross-rank accumulation is lower-precision.
+        y2 = y2.astype(reduce_dtype)
+    if reduce == "psum":
+        return jax.lax.psum(y2, axis)                            # l.6 / l.3
+    if reduce == "psum_scatter":
+        # beyond-paper epilogue: reduce-scatter along the output dim; the
+        # caller keeps the output sharded (halves ICI bytes vs all-reduce).
+        return jax.lax.psum_scatter(y2, axis, scatter_dimension=y2.ndim - 1,
+                                    tiled=True)
+    if reduce == "none":
+        return y2
+    raise ValueError(f"unknown reduce {reduce!r}")
+
+
+def pair_forward_tp(
+    x: jax.Array,
+    pp: PlannedPair,
+    mesh: jax.sharding.Mesh,
+    *,
+    axis: str = "model",
+    batch_axes: tuple = (),
+    activation: Optional[str] = None,
+    compute_dtype=jnp.float32,
+    backend: str = "jnp",
+    reduce: str = "psum",
+    reduce_dtype=None,
+) -> jax.Array:
+    """Tensor-parallel forward over mesh axis ``axis``.
+
+    ``x``: (..., K1), sharded over ``batch_axes`` on its leading dim (if
+    given), replicated along ``axis``.  Weights are consumed with the
+    canonical TP sharding (see ``pair_pspecs``); under jit, GSPMD moves the
+    globally-laid-out arrays into place, or callers pass pre-sharded arrays.
+    """
+    bspec = (batch_axes if batch_axes else None,) + (None,) * (x.ndim - 1)
+    x_spec = P(*bspec)
+    out_last = axis if reduce == "psum_scatter" else None
+    out_spec = P(*((bspec[0],) + (None,) * (x.ndim - 2) + (out_last,)))
+
+    fn = functools.partial(
+        _pair_local_forward, axis=axis, activation=activation,
+        compute_dtype=compute_dtype, backend=backend, reduce=reduce,
+        reduce_dtype=reduce_dtype)
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(x_spec, pair_pspecs(pp, axis)),
+        out_specs=out_spec,
+        check_vma=False,
+    )(x, pp)

@@ -1,0 +1,260 @@
+"""Pallas TPU kernels: fused int4 dequantize + GEMM.
+
+TPU adaptation of the ExllamaV2 dequant GEMM (see DESIGN.md §2).  The unit
+of locality on GPU is a warp's shared-memory staging of scales; on TPU it is
+the VMEM residency of a ``(bk/gs, bn)`` metadata tile that is reused across
+the whole ``(bm, bn)`` output tile.
+
+Two variants, structurally mirroring the paper's two memory-access regimes:
+
+* ``ordered`` — Algorithm-1 layout: quant groups are contiguous along K, so
+  the K-block of size ``bk`` (a multiple of ``group_size``) touches exactly
+  ``bk/gs`` metadata rows, streamed as a small VMEM tile.  This is the
+  locality-friendly path.
+* ``gidx`` — the naive Eq.-3 layout: rows belong to arbitrary groups, so the
+  *entire* ``(G, bn)`` scale/zero table must stay VMEM-resident per N-tile
+  and every row performs a dynamic gather.  This reproduces (structurally)
+  the metadata-reload penalty the paper describes.
+
+Packing: 8 int4 nibbles per uint32 along K (``quantization.pack_int4``); a
+``(bk, bn)`` logical weight tile is a ``(bk/8, bn)`` uint32 VMEM tile,
+unpacked with VPU shifts/masks and fed to the MXU in the compute dtype with
+f32 accumulation.
+
+All kernels are validated on CPU with ``interpret=True`` against
+``ref.py``; on real TPUs the same ``pallas_call`` lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from math import gcd
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+PACK = 8
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // gcd(a, b)
+
+
+def pick_block_k(k: int, group_size: int, target: int = 256) -> int:
+    """K-tile: a multiple of lcm(group_size, 8) dividing K, close to target."""
+    base = _lcm(group_size, PACK)
+    bk = base
+    while bk * 2 <= min(k, target) and k % (bk * 2) == 0:
+        bk *= 2
+    if k % bk:
+        raise ValueError(f"K={k} not tileable with group_size={group_size}")
+    return bk
+
+
+# ---------------------------------------------------------------------------
+# ordered-groups kernel
+# ---------------------------------------------------------------------------
+
+def _dequant_matmul_ordered_kernel(x_ref, qw_ref, s_ref, z_ref, o_ref,
+                                   acc_ref, *, group_size: int, bk: int,
+                                   compute_dtype):
+    """Grid (M/bm, N/bn, K/bk); K innermost so acc_ref carries the sum."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # unpack (bk/8, bn) uint32 -> (bk, bn) int in [0, 15]
+    qw = qw_ref[...]
+    shifts = (jnp.arange(PACK, dtype=jnp.uint32) * 4)[None, :, None]
+    nibbles = (qw[:, None, :] >> shifts) & jnp.uint32(0xF)
+    q = nibbles.reshape(bk, qw.shape[-1]).astype(jnp.float32)
+
+    # one metadata row per quant group in this K-tile (VMEM-resident, reused
+    # across the whole (bm, bn) tile — the TPU form of the locality win)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0) // group_size
+    s = jnp.take_along_axis(s_ref[...].astype(jnp.float32), rows, axis=0)
+    z = jnp.take_along_axis(z_ref[...].astype(jnp.float32), rows, axis=0)
+    w = ((q - z) * s).astype(compute_dtype)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(compute_dtype), w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def dequant_matmul_ordered(
+    x: jax.Array,           # (M, K)
+    qweight: jax.Array,     # (K//8, N) uint32
+    scales: jax.Array,      # (G, N)
+    zeros: jax.Array,       # (G, N)
+    *,
+    group_size: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int | None = None,
+    compute_dtype=jnp.float32,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = x.shape
+    n = qweight.shape[1]
+    bk = block_k or pick_block_k(k, group_size)
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    if m % bm or n % bn or k % bk or bk % group_size:
+        raise ValueError(f"bad tiling m={m},n={n},k={k} bm={bm},bn={bn},bk={bk}")
+    out_dtype = out_dtype or compute_dtype
+
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(
+        _dequant_matmul_ordered_kernel, group_size=group_size, bk=bk,
+        compute_dtype=compute_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // PACK, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, qweight, scales, zeros)
+
+
+# ---------------------------------------------------------------------------
+# unordered (g_idx gather) kernel — the naive-actorder path
+# ---------------------------------------------------------------------------
+
+def _dequant_matmul_gidx_kernel(g_ref, x_ref, qw_ref, s_ref, z_ref, o_ref,
+                                acc_ref, *, bk: int, compute_dtype):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qw = qw_ref[...]
+    shifts = (jnp.arange(PACK, dtype=jnp.uint32) * 4)[None, :, None]
+    nibbles = (qw[:, None, :] >> shifts) & jnp.uint32(0xF)
+    q = nibbles.reshape(bk, qw.shape[-1]).astype(jnp.float32)
+
+    # per-row dynamic gather from the FULL (G, bn) metadata tile — the
+    # locality penalty of the unordered layout, reproduced structurally.
+    rows = g_ref[pl.dslice(kk * bk, bk)][:, None]
+    s = jnp.take_along_axis(s_ref[...].astype(jnp.float32), rows, axis=0)
+    z = jnp.take_along_axis(z_ref[...].astype(jnp.float32), rows, axis=0)
+    w = ((q - z) * s).astype(compute_dtype)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(compute_dtype), w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def dequant_matmul_gidx(
+    x: jax.Array,           # (M, K)
+    qweight: jax.Array,     # (K//8, N) uint32
+    scales: jax.Array,      # (G, N)
+    zeros: jax.Array,       # (G, N)
+    g_idx: jax.Array,       # (K,) int32 — unordered group ids
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    compute_dtype=jnp.float32,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = x.shape
+    n = qweight.shape[1]
+    g = scales.shape[0]
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    while k % bk:
+        bk //= 2
+    if bk % PACK or m % bm or n % bn:
+        raise ValueError(f"bad tiling m={m},n={n},k={k} bm={bm},bn={bn},bk={bk}")
+    out_dtype = out_dtype or compute_dtype
+
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(
+        _dequant_matmul_gidx_kernel, bk=bk, compute_dtype=compute_dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # NB: with scalar prefetch, index maps get the prefetch ref too.
+            pl.BlockSpec((bm, bk), lambda i, j, kk, g_ref: (i, kk)),
+            pl.BlockSpec((bk // PACK, bn), lambda i, j, kk, g_ref: (kk, j)),
+            pl.BlockSpec((g, bn), lambda i, j, kk, g_ref: (0, j)),  # FULL G
+            pl.BlockSpec((g, bn), lambda i, j, kk, g_ref: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, g_ref: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(g_idx, x, qweight, scales, zeros)
+
+
+# ---------------------------------------------------------------------------
+# standalone dequantize kernel (weight materialization, e.g. for conversion)
+# ---------------------------------------------------------------------------
+
+def _dequant_kernel(qw_ref, s_ref, z_ref, o_ref, *, group_size: int, bk: int):
+    qw = qw_ref[...]
+    shifts = (jnp.arange(PACK, dtype=jnp.uint32) * 4)[None, :, None]
+    nibbles = (qw[:, None, :] >> shifts) & jnp.uint32(0xF)
+    q = nibbles.reshape(bk, qw.shape[-1]).astype(jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0) // group_size
+    s = jnp.take_along_axis(s_ref[...].astype(jnp.float32), rows, axis=0)
+    z = jnp.take_along_axis(z_ref[...].astype(jnp.float32), rows, axis=0)
+    o_ref[...] = ((q - z) * s).astype(o_ref.dtype)
+
+
+def dequantize_ordered(
+    qweight: jax.Array, scales: jax.Array, zeros: jax.Array, *,
+    group_size: int, block_n: int = 256, block_k: int | None = None,
+    out_dtype=jnp.float32, interpret: bool = True,
+) -> jax.Array:
+    k = qweight.shape[0] * PACK
+    n = qweight.shape[1]
+    bk = block_k or pick_block_k(k, group_size)
+    bn = min(block_n, n)
+    while bn > 1 and n % bn:
+        bn //= 2
+    if n % bn or k % bk:
+        raise ValueError(f"bad tiling k={k},n={n} bk={bk},bn={bn}")
+    kernel = functools.partial(_dequant_kernel, group_size=group_size, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(k // bk, n // bn),
+        in_specs=[
+            pl.BlockSpec((bk // PACK, bn), lambda kk, j: (kk, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda kk, j: (kk, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda kk, j: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda kk, j: (kk, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), out_dtype),
+        interpret=interpret,
+    )(qweight, scales, zeros)

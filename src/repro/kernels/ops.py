@@ -1,0 +1,112 @@
+"""Public jit'd wrappers around the Pallas dequant kernels.
+
+Handles the impedance between model code and kernel constraints:
+* arbitrary leading batch dims (flattened to M),
+* M/N padding to tile multiples (zero-padded, sliced off),
+* dispatch on ``QuantizedLinear.kind`` (ordered vs g_idx gather),
+* interpret=True on CPU (this container), compiled Mosaic on real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import PACK, QuantizedLinear
+from repro.kernels import dequant_matmul as dk
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("compute_dtype", "block_m",
+                                             "block_n", "interpret"))
+def dequant_matmul(
+    x: jax.Array,
+    ql: QuantizedLinear,
+    *,
+    compute_dtype=jnp.float32,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``x @ dequantize(ql)`` with the fused Pallas kernel.
+
+    ``x``: (..., K).  Returns (..., N) in ``compute_dtype``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    *lead, k = x.shape
+    if k != ql.k:
+        raise ValueError(f"x K={k} != weight K={ql.k}")
+    n = ql.n
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+
+    bm = min(block_m, max(8, m))
+    x2 = _pad_to(x2, bm, 0)
+    bn = min(block_n, n)
+    qweight, scales, zeros = ql.qweight, ql.scales, ql.zeros
+    if n % bn:
+        qweight = _pad_to(qweight, bn, 1)
+        scales = _pad_to(scales, bn, 1)
+        zeros = _pad_to(zeros, bn, 1)
+
+    if ql.kind == "ordered":
+        y = dk.dequant_matmul_ordered(
+            x2, qweight, scales, zeros, group_size=ql.group_size,
+            block_m=bm, block_n=bn, compute_dtype=compute_dtype,
+            interpret=interpret)
+    else:
+        y = dk.dequant_matmul_gidx(
+            x2, qweight, scales, zeros, ql.g_idx,
+            block_m=bm, block_n=bn, compute_dtype=compute_dtype,
+            interpret=interpret)
+    return y[:m, :n].reshape(*lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def dequantize(ql: QuantizedLinear, *, out_dtype=jnp.float32,
+               interpret: bool | None = None) -> jax.Array:
+    """Materialize the fp weight with the standalone dequant kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if ql.kind != "ordered":
+        # unordered materialization has no locality to exploit; use ref path
+        from repro.kernels import ref
+
+        return ref.dequantize(ql).astype(out_dtype)
+    return dk.dequantize_ordered(
+        ql.qweight, ql.scales, ql.zeros, group_size=ql.group_size,
+        out_dtype=out_dtype, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """Fused flash attention (B, H, S, D); see kernels/flash_attention.py."""
+    from repro.kernels import flash_attention as fa
+
+    if interpret is None:
+        interpret = not _on_tpu()
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (the `ref.py` contract).
+
+These mirror the kernel APIs 1:1 and are the ground truth for the
+shape/dtype sweep tests in ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qz
+from repro.core.quantization import QuantizedLinear
+
+
+def dequantize(ql: QuantizedLinear, dtype=jnp.float32) -> jax.Array:
+    return qz.dequantize(ql, dtype=dtype)
+
+
+def dequant_matmul(x: jax.Array, ql: QuantizedLinear,
+                   compute_dtype=jnp.float32) -> jax.Array:
+    w = qz.dequantize(ql, dtype=compute_dtype)
+    return jnp.matmul(x.astype(compute_dtype), w)
+
+
+def dequant_matmul_ordered(x, qweight, scales, zeros, *, group_size,
+                           compute_dtype=jnp.float32):
+    k = qweight.shape[0] * qz.PACK
+    q = qz.unpack_int4(qweight).astype(jnp.float32)
+    g_idx = jnp.arange(k, dtype=jnp.int32) // group_size
+    s = jnp.take(scales, g_idx, axis=0).astype(jnp.float32)
+    z = jnp.take(zeros, g_idx, axis=0).astype(jnp.float32)
+    w = ((q - z) * s).astype(compute_dtype)
+    return jnp.matmul(x.astype(compute_dtype), w)
+
+
+def dequant_matmul_gidx(x, qweight, scales, zeros, g_idx, *,
+                        compute_dtype=jnp.float32):
+    q = qz.unpack_int4(qweight).astype(jnp.float32)
+    s = jnp.take(scales, g_idx, axis=0).astype(jnp.float32)
+    z = jnp.take(zeros, g_idx, axis=0).astype(jnp.float32)
+    w = ((q - z) * s).astype(compute_dtype)
+    return jnp.matmul(x.astype(compute_dtype), w)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None):
+    """Oracle for kernels.flash_attention: plain masked softmax attention.
+
+    q/k/v: (B, H, S|T, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    sc = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) / d ** 0.5
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = mask & (j <= i)
+    if window is not None:
+        mask = mask & (j > i - window)
+    sc = jnp.where(mask, sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,401 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) pair.
+
+No real allocation: params/batch/cache are ShapeDtypeStructs
+(``jax.eval_shape`` over the real init functions) and the program is only
+``.lower().compile()``'d.  Proves the sharding config is coherent at
+production scale and yields the cost/memory/collective numbers for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.jsonl
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch import mesh as mesh_lib, roofline
+from repro.models.common import ParallelContext
+from repro.models.registry import Model, build_model
+from repro.train import optimizer as opt, trainstep
+
+
+# ---------------------------------------------------------------------------
+# struct helpers
+# ---------------------------------------------------------------------------
+
+def _cast_float_structs(tree, dtype=jnp.bfloat16):
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, dtype)
+        return x
+    return jax.tree.map(cast, tree)
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def param_structs(model: Model, *, bf16: bool) -> dict:
+    structs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return _cast_float_structs(structs) if bf16 else structs
+
+
+# ---------------------------------------------------------------------------
+# program builders (one per input-shape kind)
+# ---------------------------------------------------------------------------
+
+def _tp_size(mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+
+def lower_train(model: Model, mesh, shape, scheme: str,
+                chunk_scan: bool = True):
+    """train_4k: dense model (quantization is an inference artifact),
+    full AdamW train step with donated state and remat."""
+    cfg = model.cfg.with_quant(mode="none").with_(attn_tp_pad=_tp_size(mesh))
+    model = build_model(cfg)
+    baxes = mesh_lib.batch_axes_for(mesh, shape.global_batch)
+    ctx = ParallelContext(mesh=mesh, batch_axes=baxes, remat=True,
+                          chunk_scan=chunk_scan)
+
+    pstructs = param_structs(model, bf16=False)
+    state_structs = {"params": pstructs,
+                     "opt": jax.eval_shape(opt.init_state, pstructs)}
+    batch_structs = model.batch_shape_structs(
+        shape.global_batch, shape.seq_len, with_labels=True)
+
+    pspecs = model.param_specs(pstructs, ctx)
+    state_specs = {"params": pspecs, "opt": opt.state_specs(pspecs)}
+    bspecs = model.batch_specs(ctx, with_labels=True)
+
+    ocfg = opt.AdamWConfig()
+    step = trainstep.make_train_step(model, ctx, ocfg)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(_shardings(mesh, state_specs),
+                      _shardings(mesh, bspecs)),
+        donate_argnums=0)
+    return jitted.lower(state_structs, batch_structs)
+
+
+def lower_prefill(model: Model, mesh, shape, scheme: str,
+                  chunk_scan: bool = True, ctx_overrides=None):
+    """prefill_32k: quantized deployment forward -> logits."""
+    cfg = model.cfg.with_quant(mode="mlp", scheme=scheme).with_(
+        attn_tp_pad=_tp_size(mesh))
+    model = build_model(cfg)
+    baxes = mesh_lib.batch_axes_for(mesh, shape.global_batch)
+    ctx = ParallelContext(mesh=mesh, batch_axes=baxes, remat=True,
+                          chunk_scan=chunk_scan, **(ctx_overrides or {}))
+
+    pstructs = param_structs(model, bf16=True)
+    batch_structs = model.batch_shape_structs(shape.global_batch,
+                                              shape.seq_len)
+    pspecs = model.param_specs(pstructs, ctx)
+    bspecs = model.batch_specs(ctx)
+
+    window = cfg.attention_window if shape.seq_len > 32_768 else None
+
+    def prefill(params, batch):
+        return model.forward(params, batch, ctx, window=window)
+
+    jitted = jax.jit(
+        prefill,
+        in_shardings=(_shardings(mesh, pspecs), _shardings(mesh, bspecs)))
+    return jitted.lower(pstructs, batch_structs)
+
+
+def lower_decode(model: Model, mesh, shape, scheme: str,
+                 chunk_scan: bool = True):
+    """decode_32k / long_500k: one-token serve_step with KV/state cache."""
+    cfg = model.cfg.with_quant(mode="mlp", scheme=scheme).with_(
+        attn_tp_pad=_tp_size(mesh))
+    model = build_model(cfg)
+    window = model.decode_window(shape.seq_len)   # raises for whisper@500k
+    baxes = mesh_lib.batch_axes_for(mesh, shape.global_batch)
+    ctx = ParallelContext(mesh=mesh, batch_axes=baxes,
+                          chunk_scan=chunk_scan)
+
+    pstructs = param_structs(model, bf16=True)
+    cache_structs = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 window=window))
+    tok_struct = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    pspecs = model.param_specs(pstructs, ctx)
+    cspecs = model.cache_specs(ctx)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, ctx,
+                                 window=window)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(_shardings(mesh, pspecs), _shardings(mesh, cspecs),
+                      NamedSharding(mesh, P(ctx.batch_spec)),
+                      NamedSharding(mesh, P())),
+        donate_argnums=1)
+    return jitted.lower(pstructs, cache_structs, tok_struct, pos_struct)
+
+
+_LOWER = {"train": lower_train, "prefill": lower_prefill,
+          "decode": lower_decode}
+
+
+# ---------------------------------------------------------------------------
+# cost extraction.  Two XLA facts (verified empirically):
+#   * cost_analysis() numbers are PER-DEVICE on an SPMD module,
+#   * a lax.scan (while-loop) body is counted ONCE regardless of length —
+#     so a length-1 scan is counted exactly, and a length-0 scan contributes
+#     nothing.  We therefore probe f(0) and f(one unit of each scanned
+#     stack) and assemble  total = f(0) + Σ_stacks n_units × Δ_unit .
+# ---------------------------------------------------------------------------
+
+def _raw_cost(compiled, chips: int) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = roofline.parse_collective_bytes(compiled.as_text(), chips=chips)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll["total_per_device"],
+        "counts": coll["counts"],
+    }
+
+
+def _cost_lin(c1: dict, c2: dict, a: float, b: float) -> dict:
+    """a*c1 + b*c2 elementwise on the numeric fields."""
+    out = {k: a * c1[k] + b * c2[k] for k in ("flops", "bytes", "coll")}
+    out["counts"] = c2.get("counts", c1.get("counts"))
+    return out
+
+
+def probe_plan(cfg):
+    """Probe configs + combiner for the f(0)/f(unit) decomposition.
+
+    Every probe keeps all dimensions at full size; only scanned layer
+    counts shrink to 0 or 1 unit so cost_analysis counts each scan body
+    exactly (once) or not at all.
+    """
+    fam = cfg.family
+    if fam == "vlm":
+        ce = cfg.cross_attn_every
+        ns = cfg.num_layers // ce
+        n_self = cfg.num_layers - ns
+        # f0: no layers.  fx: one superblock of (1 cross, 0 self) via
+        # cross_attn_every=1.  fs: one superblock of (1 cross, 1 self).
+        probes = {
+            "f0": cfg.with_(num_layers=0),
+            "fx": cfg.with_(num_layers=1, cross_attn_every=1),
+            "fs": cfg.with_(num_layers=2, cross_attn_every=2),
+        }
+
+        def combine(c):
+            d_cross = _cost_lin(c["fx"], c["f0"], 1.0, -1.0)
+            d_self = _cost_lin(c["fs"], c["fx"], 1.0, -1.0)
+            total = _cost_lin(c["f0"], d_cross, 1.0, ns)
+            return _cost_lin(total, d_self, 1.0, n_self)
+    elif fam == "audio":
+        probes = {
+            "f0": cfg.with_(num_layers=0, encoder_layers=0),
+            "fe": cfg.with_(num_layers=0, encoder_layers=1),
+            "fd": cfg.with_(num_layers=1, encoder_layers=0),
+        }
+        n_enc, n_dec = cfg.encoder_layers, cfg.num_layers
+
+        def combine(c):
+            d_enc = _cost_lin(c["fe"], c["f0"], 1.0, -1.0)
+            d_dec = _cost_lin(c["fd"], c["f0"], 1.0, -1.0)
+            total = _cost_lin(c["f0"], d_enc, 1.0, n_enc)
+            return _cost_lin(total, d_dec, 1.0, n_dec)
+    elif fam == "hybrid":
+        ns, nx = cfg.num_layers // 3, cfg.num_layers % 3
+        # num_layers=3 -> 1 superblock, 0 extra; num_layers=1 -> 0 super,
+        # 1 extra recurrent layer (length-1 scans, counted exactly).
+        probes = {
+            "f0": cfg.with_(num_layers=0),
+            "fs": cfg.with_(num_layers=3),
+            "fr": cfg.with_(num_layers=1),
+        }
+
+        def combine(c):
+            d_super = _cost_lin(c["fs"], c["f0"], 1.0, -1.0)
+            d_rec = _cost_lin(c["fr"], c["f0"], 1.0, -1.0)
+            total = _cost_lin(c["f0"], d_super, 1.0, ns)
+            return _cost_lin(total, d_rec, 1.0, nx)
+    else:  # dense / moe / ssm: one plain layer scan
+        probes = {"f0": cfg.with_(num_layers=0),
+                  "f1": cfg.with_(num_layers=1)}
+        n = cfg.num_layers
+
+        def combine(c):
+            d = _cost_lin(c["f1"], c["f0"], 1.0, -1.0)
+            return _cost_lin(c["f0"], d, 1.0, n)
+    return probes, combine
+
+
+def analytic_extra_flops(cfg, shape) -> float:
+    """Within-layer sequence scans that cost_analysis can't see.
+
+    RWKV-6's WKV recurrence runs a lax.scan over the sequence inside each
+    layer: ~6 flops per (head, dk, dv) cell per token.  Global count.
+    """
+    if cfg.family != "ssm" or shape.kind == "decode":
+        return 0.0
+    h = cfg.d_model // cfg.rwkv_head_dim
+    cell = h * cfg.rwkv_head_dim * cfg.rwkv_head_dim * 6
+    tokens = shape.global_batch * shape.seq_len
+    return float(cfg.num_layers) * cell * tokens
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs: 6·N·D train, 2·N_active·D inference (D = tokens).
+
+    MoE uses N_active in both cases (6·N_active·D per the assignment) —
+    the compiled program only runs top-k experts.  NOTE: 6ND/2ND counts
+    parameter FLOPs only; the S² attention term is excluded by the
+    metric's definition, so long-context attention-heavy configs
+    legitimately show useful_flops_frac << 1 (EXPERIMENTS.md §Roofline).
+    """
+    n = cfg.active_param_count() if cfg.num_experts else (
+        cfg.param_count() if shape.kind == "train"
+        else cfg.active_param_count())
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind != "decode" else shape.global_batch)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult) * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            scheme: str = "tp-aware",
+            verbose: bool = True) -> Optional[dict]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+    model = build_model(cfg)
+
+    t0 = time.time()
+    try:
+        lowered = _LOWER[shape.kind](model, mesh, shape, scheme)
+    except ValueError as e:
+        if "skipped" in str(e) or "sliding-window" in str(e):
+            print(f"SKIP  {arch} × {shape_name}: {e}")
+            return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "skipped": str(e)}
+        raise
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    # layer-probe extrapolation (scan bodies are counted once; see above)
+    probes, combine = probe_plan(cfg)
+    pcosts = {}
+    for label, pcfg in probes.items():
+        plow = _LOWER[shape.kind](build_model(pcfg), mesh, shape, scheme,
+                                  chunk_scan=False)
+        pcosts[label] = _raw_cost(plow.compile(), chips)
+    cost = combine(pcosts)
+
+    mem = compiled.memory_analysis()
+    per_dev = float(getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "output_size_in_bytes", 0)
+                    + getattr(mem, "temp_size_in_bytes", 0))
+    extra = analytic_extra_flops(cfg, shape)
+    rl = roofline.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=cost["flops"] * chips + extra,
+        hlo_bytes=cost["bytes"] * chips,
+        collective_bytes=cost["coll"] * chips,
+        model_flops=model_flops(cfg, shape),
+        per_device_hbm=per_dev,
+        collective_detail={"counts": cost["counts"],
+                           "analytic_extra_flops": extra})
+    rec = rl.to_json()
+    rec.update(scheme=scheme, t_lower_s=round(t_lower, 1),
+               t_compile_s=round(t_compile, 1))
+
+    if verbose:
+        print(f"OK    {arch} × {shape_name} × {mesh_name} [{scheme}] "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"      per-device HBM: args={roofline.fmt_bytes(getattr(mem, 'argument_size_in_bytes', 0))} "
+              f"temp={roofline.fmt_bytes(getattr(mem, 'temp_size_in_bytes', 0))} "
+              f"out={roofline.fmt_bytes(getattr(mem, 'output_size_in_bytes', 0))}")
+        print(f"      flops={rl.hlo_flops:.3e} bytes={rl.hlo_bytes:.3e} "
+              f"coll={roofline.fmt_bytes(rl.collective_bytes)} "
+              f"counts={rl.collective_detail['counts']}")
+        print(f"      t_comp={roofline.fmt_seconds(rl.t_compute)} "
+              f"t_mem={roofline.fmt_seconds(rl.t_memory)} "
+              f"t_coll={roofline.fmt_seconds(rl.t_collective)} "
+              f"bottleneck={rl.bottleneck} "
+              f"useful={rl.useful_flops_frac:.2f}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--scheme", default="tp-aware")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_one(arch, shape, multi_pod=mp,
+                                  scheme=args.scheme)
+                except Exception as e:
+                    print(f"FAIL  {arch} × {shape} multi_pod={mp}: {e}")
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp))
+                    continue
+                if rec:
+                    records.append(rec)
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps(rec) + "\n")
+    print(f"\n{len(records)} lowered+compiled, {len(failures)} failures")
+    if failures:
+        for f_ in failures:
+            print("  FAILED:", f_)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS for 512 host devices before any jax
+import; smoke tests see 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)            # 256 chips (one v5e pod slice)
+MULTI_POD = (2, 16, 16)          # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — run "
+            "under launch/dryrun.py which forces 512 host devices")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    if n % model:
+        raise ValueError(f"{n} devices not divisible by model={model}")
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def batch_axes_for(mesh: jax.sharding.Mesh, global_batch: int) -> tuple:
+    """Batch-sharding axes usable for this mesh and batch size.
+
+    Decode at batch=1 (long_500k) cannot shard its batch dim — returns ()
+    so the batch is replicated and only the model axis does real work.
+    """
+    axes = [a for a in mesh.axis_names if a in ("pod", "data")]
+    out = []
+    size = 1
+    for a in axes:
+        s = dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        if global_batch % (size * s) == 0:
+            out.append(a)
+            size *= s
+    return tuple(out)

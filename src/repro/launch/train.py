@@ -1,0 +1,84 @@
+"""Training entrypoint (single-host scale; the same code path the dry-run
+lowers at production scale).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+      --steps 100 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch import mesh as mesh_lib
+from repro.models.common import ParallelContext, REPLICATED
+from repro.models.registry import build_model
+from repro.train import checkpoint, data as data_lib, optimizer as opt
+from repro.train import trainstep
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="model-axis size over available devices")
+    ap.add_argument("--data", default=None, help="token file (uint16)")
+    ap.add_argument("--ckpt", default=None, help="checkpoint path prefix")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch)).with_quant(mode="none")
+    model = build_model(cfg)
+
+    if args.tp > 1 or len(jax.devices()) > 1:
+        mesh = mesh_lib.make_host_mesh(model=args.tp)
+        ctx = ParallelContext(mesh=mesh, batch_axes=("data",))
+    else:
+        mesh, ctx = None, REPLICATED
+
+    ocfg = opt.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                           warmup_steps=max(args.steps // 20, 1))
+    state = trainstep.init_train_state(model, jax.random.PRNGKey(0))
+    step_fn = jax.jit(trainstep.make_train_step(model, ctx, ocfg),
+                      donate_argnums=0)
+
+    dcfg = data_lib.DataConfig(seq_len=args.seq, global_batch=args.batch,
+                               vocab_size=cfg.vocab_size, path=args.data)
+    batches = data_lib.batches(dcfg)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = next(batches)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (args.batch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        state, metrics = step_fn(state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            loss = float(metrics["loss"])
+            print(f"step {i:5d} loss {loss:7.4f} "
+                  f"gnorm {float(metrics['grad_norm']):7.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+
+    if args.ckpt:
+        path = checkpoint.save(args.ckpt, state["params"],
+                               step=int(metrics["step"]))
+        print("saved", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Model registry: uniform ``build_model(cfg)`` over every assigned arch.
+
+Every family module exports the same functional interface:
+
+* ``init_params(cfg, rng) -> params``
+* ``param_specs(cfg, params, ctx) -> PartitionSpec pytree``
+* ``forward(cfg, params, batch, ctx, *, window=None) -> logits``
+* ``init_cache(cfg, batch, seq_len, *, window=None, dtype) -> cache``
+* ``cache_specs(cfg, ctx) -> PartitionSpec pytree``
+* ``decode_step(cfg, params, cache, tokens, pos, ctx, *, window=None)``
+
+The registry adds:
+* family -> module dispatch,
+* ``make_batch`` / ``batch_specs`` covering modality stubs (audio frames,
+  vision patches) per the assignment carve-out,
+* ``input_specs`` ShapeDtypeStruct stand-ins for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import (moe, rglru, rwkv6, transformer, vision_llama,
+                          whisper)
+from repro.models.common import ParallelContext
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": moe,
+    "hybrid": rglru,
+    "ssm": rwkv6,
+    "audio": whisper,
+    "vlm": vision_llama,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Bound (cfg, family-module) pair with the uniform interface."""
+
+    cfg: ModelConfig
+    module: Any
+
+    def init(self, rng) -> Any:
+        return self.module.init_params(self.cfg, rng)
+
+    def param_specs(self, params, ctx: ParallelContext):
+        return self.module.param_specs(self.cfg, params, ctx)
+
+    def forward(self, params, batch, ctx: ParallelContext, *, window=None):
+        return self.module.forward(self.cfg, params, batch, ctx,
+                                   window=window)
+
+    def init_cache(self, batch: int, seq_len: int, *, window=None,
+                   dtype=jnp.bfloat16):
+        return self.module.init_cache(self.cfg, batch, seq_len,
+                                      window=window, dtype=dtype)
+
+    def cache_specs(self, ctx: ParallelContext):
+        return self.module.cache_specs(self.cfg, ctx)
+
+    def decode_step(self, params, cache, tokens, pos, ctx: ParallelContext,
+                    *, window=None):
+        return self.module.decode_step(self.cfg, params, cache, tokens, pos,
+                                       ctx, window=window)
+
+    # ----- modality-stub batches -------------------------------------------
+
+    def make_batch(self, rng, batch: int, seq_len: int,
+                   *, with_labels: bool = False,
+                   dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        rt, rf, rp = jax.random.split(rng, 3)
+        out = {"tokens": jax.random.randint(rt, (batch, seq_len), 0,
+                                            cfg.vocab_size)}
+        if cfg.family == "audio":
+            out["frames"] = jax.random.normal(
+                rf, (batch, cfg.encoder_seq, cfg.d_model), dtype)
+        if cfg.family == "vlm":
+            out["patches"] = jax.random.normal(
+                rp, (batch, cfg.vision_tokens, cfg.d_model), dtype)
+        if with_labels:
+            out["labels"] = jnp.roll(out["tokens"], -1, axis=1)
+        return out
+
+    def batch_shape_structs(self, batch: int, seq_len: int,
+                            *, with_labels: bool = False,
+                            dtype=jnp.bfloat16) -> dict:
+        """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+        cfg = self.cfg
+        out = {"tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)}
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_seq, cfg.d_model), dtype)
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct(
+                (batch, cfg.vision_tokens, cfg.d_model), dtype)
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        return out
+
+    def batch_specs(self, ctx: ParallelContext, *,
+                    with_labels: bool = False) -> dict:
+        cfg = self.cfg
+        b = ctx.batch_spec
+        out = {"tokens": P(b, None)}
+        if cfg.family == "audio":
+            out["frames"] = P(b, None, None)
+        if cfg.family == "vlm":
+            out["patches"] = P(b, None, None)
+        if with_labels:
+            out["labels"] = P(b, None)
+        return out
+
+    # ----- capability flags --------------------------------------------------
+
+    @property
+    def supports_decode(self) -> bool:
+        return True  # all assigned archs are decoders or enc-dec
+
+    def decode_window(self, seq_len: int) -> Optional[int]:
+        """KV-cache window for a decode at ``seq_len``.
+
+        Returns None for full-cache decode; a window size for the
+        sliding-window (sub-quadratic) variant; raises if the shape is
+        architecturally unsupported (whisper long_500k).
+        """
+        cfg = self.cfg
+        if cfg.family in ("ssm",):
+            return None  # O(1) state, no KV cache at all
+        if cfg.family == "hybrid":
+            return cfg.local_window
+        if seq_len > 32_768:
+            if cfg.family == "audio":
+                raise ValueError(
+                    "whisper decoder max positions 448; long_500k skipped "
+                    "(DESIGN.md §5)")
+            if cfg.attention_window is None:
+                raise ValueError(
+                    f"{cfg.arch_id}: long-context decode requires the "
+                    "sliding-window variant (attention_window unset)")
+            return cfg.attention_window
+        return None
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILY_MODULES:
+        raise KeyError(f"unknown family {cfg.family!r}")
+    return Model(cfg=cfg, module=_FAMILY_MODULES[cfg.family])

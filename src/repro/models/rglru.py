@@ -1,0 +1,299 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks and local
+(sliding-window) attention blocks at 2:1, each followed by a GeGLU MLP.
+
+Pattern: superblocks of (recurrent, recurrent, local-attn); a remainder of
+``num_layers % 3`` extra recurrent layers is appended (26 -> 8 super + 2).
+
+The RG-LRU recurrence h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*x_t) is a
+first-order linear recurrence, evaluated with ``jax.lax.associative_scan``
+(log-depth — the TPU-native way to parallelize a scan over sequence).
+Sub-quadratic: state is O(d), so long_500k decodes natively.
+
+Paper-technique note: the recurrence itself has no quantized TP GEMM pair
+(DESIGN.md §5); MLPs use the TP-aware scheme as usual.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.common import ParallelContext
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin paper)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU temporal block
+# ---------------------------------------------------------------------------
+
+def rec_block_params(cfg: ModelConfig, rng):
+    d, w = cfg.d_model, cfg.lru_width
+    r = cm.split_rngs(rng, ["x", "gate", "out", "ri", "ii", "lam", "conv"])
+    return {
+        "w_x": cm.dense_init(r["x"], (d, w)),
+        "w_gate": cm.dense_init(r["gate"], (d, w)),
+        "w_out": cm.dense_init(r["out"], (w, d)),
+        "w_rgate": cm.dense_init(r["ri"], (w, w)),
+        "w_igate": cm.dense_init(r["ii"], (w, w)),
+        "lam": jnp.linspace(0.9, 5.0, w),     # softplus^-1-ish init spread
+        "conv_w": cm.dense_init(r["conv"], (cfg.conv_width, w), 0.5),
+    }
+
+
+def rec_block_specs(cfg: ModelConfig, axis):
+    return {
+        "w_x": P(None, None, axis), "w_gate": P(None, None, axis),
+        "w_out": P(None, axis, None),
+        "w_rgate": P(None, axis, None), "w_igate": P(None, axis, None),
+        "lam": P(None, axis), "conv_w": P(None, None, axis),
+    }
+
+
+def _causal_conv(h, conv_w, state=None):
+    """Depthwise causal conv along seq.  h: (B, S, W), conv_w: (CW, W).
+
+    ``state``: (B, CW-1, W) trailing inputs from the previous segment (decode);
+    returns (out, new_state).
+    """
+    cw = conv_w.shape[0]
+    if state is None:
+        state = jnp.zeros((h.shape[0], cw - 1, h.shape[2]), h.dtype)
+    hist = jnp.concatenate([state, h], axis=1)          # (B, S+CW-1, W)
+    out = jnp.zeros_like(h)
+    for i in range(cw):
+        out = out + hist[:, i:i + h.shape[1]] * conv_w[cw - 1 - i]
+    new_state = hist[:, -(cw - 1):]
+    return out, new_state
+
+
+def _rg_lru(h, r_gate, i_gate, lam, state=None):
+    """h: (B, S, W) -> (out, last_state).  a_t = exp(-c*softplus(lam)*r_t)."""
+    r = jax.nn.sigmoid(r_gate)
+    i = jax.nn.sigmoid(i_gate)
+    log_a = -_C * jax.nn.softplus(lam) * r                  # (B, S, W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-6)) * (i * h)
+
+    if h.shape[1] == 1:  # decode fast path
+        s0 = state if state is not None else jnp.zeros_like(h[:, 0])
+        s1 = a[:, 0] * s0 + gated[:, 0]
+        return s1[:, None], s1
+
+    if state is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * state)
+
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    _, out = jax.lax.associative_scan(comb, (a, gated), axis=1)
+    return out, out[:, -1]
+
+
+def rec_block_forward(cfg: ModelConfig, p, x, ctx: ParallelContext,
+                      state=None):
+    """state: {"conv": (B, CW-1, W), "lru": (B, W)} or None (training)."""
+    xb = x @ p["w_x"]
+    xb = ctx.shard(xb, ctx.batch_spec, None, ctx.model_axis)
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+
+    conv_state = state["conv"] if state is not None else None
+    xb, new_conv = _causal_conv(xb, p["conv_w"], conv_state)
+    r_gate = xb @ p["w_rgate"]
+    i_gate = xb @ p["w_igate"]
+    lru_state = state["lru"] if state is not None else None
+    h, new_lru = _rg_lru(xb.astype(jnp.float32), r_gate.astype(jnp.float32),
+                         i_gate.astype(jnp.float32), p["lam"], lru_state)
+    h = h.astype(x.dtype) * gate
+    h = ctx.shard(h, ctx.batch_spec, None, ctx.model_axis)
+    y = h @ p["w_out"]
+    y = ctx.shard(y, ctx.batch_spec, None, None)
+    new_state = {"conv": new_conv, "lru": new_lru}
+    return y, new_state
+
+
+def init_rec_state(cfg: ModelConfig, n_layers: int, batch: int,
+                   dtype=jnp.bfloat16):
+    w = cfg.lru_width
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.conv_width - 1, w), dtype),
+        "lru": jnp.zeros((n_layers, batch, w), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _n_super(cfg):
+    return cfg.num_layers // 3, cfg.num_layers % 3
+
+
+def init_params(cfg: ModelConfig, rng):
+    r = cm.split_rngs(rng, ["embed", "super", "extra", "norm"])
+    ns, nx = _n_super(cfg)
+
+    def make_rec_layer(lr):
+        lrs = cm.split_rngs(lr, ["rec", "mlp"])
+        return {
+            "ln1": cm.norm_params(cfg),
+            "rec": rec_block_params(cfg, lrs["rec"]),
+            "ln2": cm.norm_params(cfg),
+            "mlp": cm.mlp_params(cfg, lrs["mlp"]),
+        }
+
+    def make_super(lr):
+        lrs = cm.split_rngs(lr, ["r1", "r2", "attn", "mlp"])
+        return {
+            "rec1": make_rec_layer(lrs["r1"]),
+            "rec2": make_rec_layer(lrs["r2"]),
+            "attn": {
+                "ln1": cm.norm_params(cfg),
+                "attn": cm.attention_params(cfg, lrs["attn"]),
+                "ln2": cm.norm_params(cfg),
+                "mlp": cm.mlp_params(cfg, lrs["mlp"]),
+            },
+        }
+
+    return {
+        "embed": cm.embed_params(cfg, r["embed"]),
+        "super": cm.stack_layer_params(make_super, r["super"], ns),
+        "extra": cm.stack_layer_params(make_rec_layer, r["extra"], nx)
+        if nx else None,
+        "final_norm": cm.norm_params(cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig, params, ctx: ParallelContext):
+    axis = ctx.model_axis
+    norm = {"scale": P(None, None)}
+
+    def rec_layer_specs(p):
+        return {
+            "ln1": dict(norm), "rec": rec_block_specs(cfg, axis),
+            "ln2": dict(norm),
+            "mlp": cm.mlp_specs(cfg, p["mlp"], axis),
+        }
+
+    sup = params["super"]
+    specs = {
+        "embed": cm.embed_specs(cfg, axis, ctx.axis_size(axis)),
+        "super": {
+            "rec1": rec_layer_specs(sup["rec1"]),
+            "rec2": rec_layer_specs(sup["rec2"]),
+            "attn": {
+                "ln1": dict(norm),
+                "attn": cm.attention_specs(cfg, axis),
+                "ln2": dict(norm),
+                "mlp": cm.mlp_specs(cfg, sup["attn"]["mlp"], axis),
+            },
+        },
+        "extra": (rec_layer_specs(params["extra"])
+                  if params["extra"] is not None else None),
+        "final_norm": {"scale": P(None)},
+    }
+    return specs
+
+
+def _rec_layer_fwd(cfg, ctx):
+    def body(x, lp, state):
+        h, ns = rec_block_forward(cfg, lp["rec"],
+                                  cm.apply_norm(cfg, lp["ln1"], x), ctx,
+                                  state)
+        x = x + h
+        h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
+                           ctx)
+        return x + h, ns
+    return body
+
+
+def forward(cfg: ModelConfig, params, batch, ctx: ParallelContext, *,
+            window=None):
+    x = cm.embed_tokens(cfg, params["embed"], batch["tokens"], ctx)
+    rec_fwd = _rec_layer_fwd(cfg, ctx)
+
+    def super_body(x, sp, _):
+        x, _s = rec_fwd(x, sp["rec1"], None)
+        x, _s = rec_fwd(x, sp["rec2"], None)
+        ap = sp["attn"]
+        h = cm.attention_forward(cfg, ap["attn"],
+                                 cm.apply_norm(cfg, ap["ln1"], x), ctx,
+                                 window=cfg.local_window)
+        x = x + h
+        h = cm.mlp_forward(cfg, ap["mlp"], cm.apply_norm(cfg, ap["ln2"], x),
+                           ctx)
+        return x + h
+
+    x = cm.scan_layers(super_body, x, params["super"], ctx)
+    if params["extra"] is not None:
+        def extra_body(x, lp, _):
+            y, _s = rec_fwd(x, lp, None)
+            return y
+        x = cm.scan_layers(extra_body, x, params["extra"], ctx)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    return cm.lm_head(cfg, params["embed"], x, ctx)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, window=None,
+               dtype=jnp.bfloat16):
+    ns, nx = _n_super(cfg)
+    cap = min(seq_len, cfg.local_window)
+    return {
+        "rec1": init_rec_state(cfg, ns, batch, dtype),
+        "rec2": init_rec_state(cfg, ns, batch, dtype),
+        "attn": cm.init_kv_cache(cfg, ns, batch, cap, window=cfg.local_window,
+                                 dtype=dtype),
+        "extra": init_rec_state(cfg, nx, batch, dtype) if nx else None,
+    }
+
+
+def cache_specs(cfg: ModelConfig, ctx: ParallelContext):
+    rec = {"conv": P(None, ctx.batch_spec, None, ctx.model_axis),
+           "lru": P(None, ctx.batch_spec, ctx.model_axis)}
+    return {
+        "rec1": dict(rec), "rec2": dict(rec),
+        "attn": cm.kv_cache_specs(cfg, ctx),
+        "extra": (dict(rec) if _n_super(cfg)[1] else None),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
+                ctx: ParallelContext, *, window=None):
+    x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
+    rec_fwd = _rec_layer_fwd(cfg, ctx)
+
+    def super_body(x, xs):
+        sp, (c1, c2, ca) = xs
+        x, n1 = rec_fwd(x, sp["rec1"], c1)
+        x, n2 = rec_fwd(x, sp["rec2"], c2)
+        ap = sp["attn"]
+        h, nca = cm.attention_decode(cfg, ap["attn"],
+                                     cm.apply_norm(cfg, ap["ln1"], x),
+                                     ca, pos, ctx, window=cfg.local_window)
+        x = x + h
+        h = cm.mlp_forward(cfg, ap["mlp"], cm.apply_norm(cfg, ap["ln2"], x),
+                           ctx)
+        return (x + h).astype(carry_dtype), (n1, n2, nca)
+
+    carry_dtype = x.dtype
+    x, (nc1, nc2, nca) = jax.lax.scan(
+        super_body, x,
+        (params["super"], (cache["rec1"], cache["rec2"], cache["attn"])))
+    new_cache = {"rec1": nc1, "rec2": nc2, "attn": nca, "extra": None}
+
+    if params["extra"] is not None:
+        def extra_body(x, xs):
+            lp, st = xs
+            y, ns = rec_fwd(x, lp, st)
+            return y.astype(carry_dtype), ns
+        x, nex = jax.lax.scan(extra_body, x, (params["extra"], cache["extra"]))
+        new_cache["extra"] = nex
+
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.lm_head(cfg, params["embed"], x, ctx)
+    return logits[:, 0], new_cache

@@ -1,0 +1,270 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Each layer = time-mix (multi-head linear-attention-style recurrence with
+per-channel data-dependent decay w_t and bonus u) + channel-mix.
+
+* time-mix state per head: S (dk, dv);  S_t = diag(w_t) S_{t-1} + k_t v_t^T;
+  out_t = r_t (S_{t-1} + diag(u) k_t v_t^T)  — evaluated by lax.scan over
+  sequence for training/prefill and a single step for decode (O(1) state ->
+  long_500k runs natively).
+* data-dependent token-shift (ddlerp) with the paper's low-rank (rank 32)
+  adapters, and the decay LoRA w_t = exp(-exp(w0 + tanh(x W_a) W_b)).
+* channel-mix: r-gated squared-ReLU FFN; its K->V projection pair is a
+  column-TP -> row-TP pair, so the paper's TP-aware fold applies to it
+  (DESIGN.md §5) — the time-mix recurrence itself is out of scope.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.common import ParallelContext
+
+LORA_RANK = 32
+MIX_NAMES = ("r", "k", "v", "g", "w")  # ddlerp targets
+
+
+def time_mix_params(cfg: ModelConfig, rng):
+    d = cfg.d_model
+    r = cm.split_rngs(rng, ["r", "k", "v", "g", "o", "maa1", "maa2",
+                            "w1", "w2"])
+    return {
+        "mu_x": jnp.full((d,), 0.5),
+        "mu": jnp.stack([jnp.full((d,), 0.5)] * len(MIX_NAMES)),  # (5, d)
+        "maa_w1": cm.dense_init(r["maa1"], (d, len(MIX_NAMES) * LORA_RANK)),
+        "maa_w2": cm.dense_init(r["maa2"], (len(MIX_NAMES), LORA_RANK, d)),
+        "w_r": cm.dense_init(r["r"], (d, d)),
+        "w_k": cm.dense_init(r["k"], (d, d)),
+        "w_v": cm.dense_init(r["v"], (d, d)),
+        "w_g": cm.dense_init(r["g"], (d, d)),
+        "w_o": cm.dense_init(r["o"], (d, d)),
+        "decay_base": jnp.linspace(-6.0, -1.0, d),     # w0
+        "decay_w1": cm.dense_init(r["w1"], (d, LORA_RANK)),
+        "decay_w2": cm.dense_init(r["w2"], (LORA_RANK, d)),
+        "bonus_u": jnp.linspace(-0.5, 0.5, d),
+        "ln_scale": jnp.ones(d),
+    }
+
+
+def time_mix_specs(cfg: ModelConfig, axis):
+    return {
+        "mu_x": P(None, None), "mu": P(None, None, None),
+        "maa_w1": P(None, None, None), "maa_w2": P(None, None, None, None),
+        "w_r": P(None, None, axis), "w_k": P(None, None, axis),
+        "w_v": P(None, None, axis), "w_g": P(None, None, axis),
+        "w_o": P(None, axis, None),
+        "decay_base": P(None, None), "decay_w1": P(None, None, None),
+        "decay_w2": P(None, None, None), "bonus_u": P(None, None),
+        "ln_scale": P(None, None),
+    }
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent token-shift interpolation -> dict of mixed inputs."""
+    base = x + (xx - x) * p["mu_x"]
+    lora = jnp.tanh(base @ p["maa_w1"])           # (..., 5*R)
+    lora = lora.reshape(*lora.shape[:-1], len(MIX_NAMES), LORA_RANK)
+    delta = jnp.einsum("...nr,nrd->...nd", lora, p["maa_w2"])  # (..., 5, d)
+    out = {}
+    for i, name in enumerate(MIX_NAMES):
+        mix = p["mu"][i] + delta[..., i, :]
+        out[name] = x + (xx - x) * mix
+    return out
+
+
+def _wkv_step(s, rkvwu):
+    """One recurrence step per head.  s: (H, dk, dv)."""
+    r, k, v, w, u = rkvwu                     # r/k/w: (H, dk); v: (H, dv)
+    kv = k[:, :, None] * v[:, None, :]        # (H, dk, dv)
+    out = jnp.einsum("hk,hkv->hv", r, s + u[:, :, None] * kv)
+    s_new = w[:, :, None] * s + kv
+    return s_new, out
+
+
+def time_mix_forward(cfg: ModelConfig, p, x, ctx: ParallelContext,
+                     state=None):
+    """x: (B, S, d).  state: {"shift": (B, d), "wkv": (B, H, dk, dv)}."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+
+    if state is not None:
+        prev = state["shift"]
+    else:
+        prev = jnp.zeros((b, d), x.dtype)
+    xx = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)  # shifted
+    m = _ddlerp(p, x, xx)
+
+    r = (m["r"] @ p["w_r"]).reshape(b, s, h, hd)
+    k = (m["k"] @ p["w_k"]).reshape(b, s, h, hd)
+    v = (m["v"] @ p["w_v"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(m["g"] @ p["w_g"])
+    decay = p["decay_base"] + jnp.tanh(m["w"] @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32))).reshape(b, s, h, hd)
+    u = p["bonus_u"].reshape(h, hd)
+
+    s0 = (state["wkv"] if state is not None
+          else jnp.zeros((b, h, hd, hd), jnp.float32))
+
+    def per_batch(s0_b, rb, kb, vb, wb):
+        def step(carry, t):
+            return _wkv_step(carry, (rb[t].astype(jnp.float32),
+                                     kb[t].astype(jnp.float32),
+                                     vb[t].astype(jnp.float32),
+                                     wb[t], u.astype(jnp.float32)))
+        s_fin, outs = jax.lax.scan(step, s0_b, jnp.arange(s))
+        return s_fin, outs                    # outs: (S, H, dv)
+
+    s_fin, out = jax.vmap(per_batch)(s0, r, k, v, w)
+    out = out.reshape(b, s, d)
+    # per-head group norm then gate
+    out = out.reshape(b, s, h, hd)
+    mu = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(b, s, d) * p["ln_scale"]
+    out = (out.astype(x.dtype) * g)
+    out = ctx.shard(out, ctx.batch_spec, None, None)
+    y = out @ p["w_o"]
+    new_state = {"shift": x[:, -1], "wkv": s_fin}
+    return ctx.shard(y, ctx.batch_spec, None, None), new_state
+
+
+def channel_mix_params(cfg: ModelConfig, rng):
+    d, ff = cfg.d_model, cfg.d_ff
+    r = cm.split_rngs(rng, ["r", "pair"])
+    return {
+        "mu_k": jnp.full((d,), 0.5),
+        "mu_r": jnp.full((d,), 0.5),
+        "w_r": cm.dense_init(r["r"], (d, d)),
+        "pair": cm.mlp_params(cfg, r["pair"], d_ff=ff),
+    }
+
+
+def channel_mix_specs(cfg: ModelConfig, p, axis):
+    return {
+        "mu_k": P(None, None), "mu_r": P(None, None),
+        "w_r": P(None, None, None),
+        "pair": cm.mlp_specs(cfg, p["pair"], axis),
+    }
+
+
+def channel_mix_forward(cfg: ModelConfig, p, x, ctx: ParallelContext,
+                        state=None):
+    b, s, d = x.shape
+    prev = state if state is not None else jnp.zeros((b, d), x.dtype)
+    xx = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    xk = x + (xx - x) * p["mu_k"]
+    xr = x + (xx - x) * p["mu_r"]
+    rgate = jax.nn.sigmoid(xr @ p["w_r"])
+    # K->V pair: squared-relu "activation" between up and down — this is the
+    # column-TP -> row-TP pair the paper's fold applies to.
+    v = cm.mlp_forward(cfg, p["pair"], xk, ctx, activation="relu2")
+    return rgate * v, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng):
+    r = cm.split_rngs(rng, ["embed", "layers", "norm"])
+
+    def make_layer(lr):
+        lrs = cm.split_rngs(lr, ["tm", "cm"])
+        return {
+            "ln1": cm.norm_params(cfg),
+            "tm": time_mix_params(cfg, lrs["tm"]),
+            "ln2": cm.norm_params(cfg),
+            "cm": channel_mix_params(cfg, lrs["cm"]),
+        }
+
+    return {
+        "embed": cm.embed_params(cfg, r["embed"]),
+        "layers": cm.stack_layer_params(make_layer, r["layers"],
+                                        cfg.num_layers),
+        "final_norm": cm.norm_params(cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig, params, ctx: ParallelContext):
+    axis = ctx.model_axis
+    norm = {"scale": P(None, None)}
+    return {
+        "embed": cm.embed_specs(cfg, axis, ctx.axis_size(axis)),
+        "layers": {
+            "ln1": dict(norm),
+            "tm": time_mix_specs(cfg, axis),
+            "ln2": dict(norm),
+            "cm": channel_mix_specs(cfg, params["layers"]["cm"], axis),
+        },
+        "final_norm": {"scale": P(None)},
+    }
+
+
+def forward(cfg: ModelConfig, params, batch, ctx: ParallelContext, *,
+            window=None):
+    x = cm.embed_tokens(cfg, params["embed"], batch["tokens"], ctx)
+
+    def body(x, lp, _):
+        h, _s = time_mix_forward(cfg, lp["tm"],
+                                 cm.apply_norm(cfg, lp["ln1"], x), ctx)
+        x = x + h
+        h, _s = channel_mix_forward(cfg, lp["cm"],
+                                    cm.apply_norm(cfg, lp["ln2"], x), ctx)
+        return x + h
+
+    x = cm.scan_layers(body, x, params["layers"], ctx)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    return cm.lm_head(cfg, params["embed"], x, ctx)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, window=None,
+               dtype=jnp.bfloat16):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    l = cfg.num_layers
+    return {
+        "tm_shift": jnp.zeros((l, batch, d), dtype),
+        "wkv": jnp.zeros((l, batch, h, hd, hd), jnp.float32),
+        "cm_shift": jnp.zeros((l, batch, d), dtype),
+    }
+
+
+def cache_specs(cfg: ModelConfig, ctx: ParallelContext):
+    return {
+        "tm_shift": P(None, ctx.batch_spec, None),
+        # (L, B, H, dk, dv): H (40) doesn't divide a 16-way axis; dk (64)
+        # does — shard the state over dk instead.
+        "wkv": P(None, ctx.batch_spec, None, ctx.model_axis, None),
+        "cm_shift": P(None, ctx.batch_spec, None),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
+                ctx: ParallelContext, *, window=None):
+    x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
+
+    def body(x, xs):
+        lp, (ts, wkv, cs) = xs
+        h, ns_tm = time_mix_forward(
+            cfg, lp["tm"], cm.apply_norm(cfg, lp["ln1"], x), ctx,
+            state={"shift": ts, "wkv": wkv})
+        x = x + h
+        h, ns_cm = channel_mix_forward(
+            cfg, lp["cm"], cm.apply_norm(cfg, lp["ln2"], x), ctx, state=cs)
+        x = x + h
+        return x.astype(carry_dtype), (ns_tm["shift"], ns_tm["wkv"], ns_cm)
+
+    carry_dtype = x.dtype
+    x, (nts, nwkv, ncs) = jax.lax.scan(
+        body, x, (params["layers"],
+                  (cache["tm_shift"], cache["wkv"], cache["cm_shift"])))
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.lm_head(cfg, params["embed"], x, ctx)
+    return logits[:, 0], {"tm_shift": nts, "wkv": nwkv, "cm_shift": ncs}

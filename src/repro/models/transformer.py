@@ -1,0 +1,101 @@
+"""Generic dense decoder-only transformer (llama/qwen/mistral/starcoder/
+granite families): pre-norm GQA attention + (optionally quantized) MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models.common import ParallelContext
+
+
+def init_params(cfg: ModelConfig, rng):
+    r = cm.split_rngs(rng, ["embed", "layers", "norm"])
+
+    def make_layer(lr):
+        lrs = cm.split_rngs(lr, ["attn", "mlp"])
+        return {
+            "ln1": cm.norm_params(cfg),
+            "attn": cm.attention_params(cfg, lrs["attn"]),
+            "ln2": cm.norm_params(cfg),
+            "mlp": cm.mlp_params(cfg, lrs["mlp"]),
+        }
+
+    return {
+        "embed": cm.embed_params(cfg, r["embed"]),
+        "layers": cm.stack_layer_params(make_layer, r["layers"],
+                                        cfg.num_layers),
+        "final_norm": cm.norm_params(cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig, params, ctx: ParallelContext):
+    axis = ctx.model_axis
+    norm = {"scale": P(None, None)} if cfg.norm_type == "rms" else \
+        {"scale": P(None, None), "bias": P(None, None)}
+    return {
+        "embed": cm.embed_specs(cfg, axis, ctx.axis_size(axis)),
+        "layers": {
+            "ln1": dict(norm),
+            "attn": cm.attention_specs(cfg, axis),
+            "ln2": dict(norm),
+            "mlp": cm.mlp_specs(cfg, params["layers"]["mlp"], axis),
+        },
+        "final_norm": {k: P(None) for k in
+                       (("scale", "bias") if cfg.norm_type == "layernorm"
+                        else ("scale",))},
+    }
+
+
+def _layer(cfg, ctx, window):
+    def body(x, lp, _):
+        h = cm.attention_forward(cfg, lp["attn"],
+                                 cm.apply_norm(cfg, lp["ln1"], x), ctx,
+                                 window=window, causal=cfg.causal)
+        x = x + h
+        h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
+                           ctx)
+        return x + h
+    return body
+
+
+def forward(cfg: ModelConfig, params, batch, ctx: ParallelContext, *,
+            window=None):
+    """Train/prefill forward: batch={"tokens": (B, S)} -> logits."""
+    x = cm.embed_tokens(cfg, params["embed"], batch["tokens"], ctx)
+    x = cm.scan_layers(_layer(cfg, ctx, window), x, params["layers"], ctx)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    return cm.lm_head(cfg, params["embed"], x, ctx)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, window=None,
+               dtype=jnp.bfloat16):
+    return cm.init_kv_cache(cfg, cfg.num_layers, batch, seq_len,
+                            window=window, dtype=dtype)
+
+
+def cache_specs(cfg: ModelConfig, ctx: ParallelContext):
+    return cm.kv_cache_specs(cfg, ctx)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
+                ctx: ParallelContext, *, window=None):
+    """One-token decode. tokens: (B,), pos: scalar -> (logits (B, V), cache)."""
+    x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
+
+    def body(x, lp, lc, _):
+        h, nc = cm.attention_decode(cfg, lp["attn"],
+                                    cm.apply_norm(cfg, lp["ln1"], x),
+                                    lc, pos, ctx, window=window)
+        x = x + h
+        h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
+                           ctx)
+        return x + h, nc
+
+    x, new_cache = cm.scan_layers_cache(body, x, params["layers"], cache, ctx)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.lm_head(cfg, params["embed"], x, ctx)
+    return logits[:, 0], new_cache

@@ -1,0 +1,200 @@
+"""Llama-3.2-Vision backbone: decoder with gated cross-attention image
+layers every ``cross_attn_every`` layers (assignment: 100L = 80 self + 20
+cross).  The ViT/SigLIP vision encoder + projector is a STUB:
+``batch["patches"]`` carries precomputed patch embeddings
+(B, vision_tokens, d_model).
+
+Structure: scan over ``n_super = L / cross_attn_every`` superblocks, each =
+(cross_attn_every - 1) self layers (inner scan) + 1 gated cross layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models.common import ParallelContext
+
+
+def _n_super(cfg: ModelConfig):
+    assert cfg.num_layers % cfg.cross_attn_every == 0
+    return cfg.num_layers // cfg.cross_attn_every, cfg.cross_attn_every - 1
+
+
+def _self_layer_params(cfg, lr):
+    lrs = cm.split_rngs(lr, ["attn", "mlp"])
+    return {
+        "ln1": cm.norm_params(cfg),
+        "attn": cm.attention_params(cfg, lrs["attn"]),
+        "ln2": cm.norm_params(cfg),
+        "mlp": cm.mlp_params(cfg, lrs["mlp"]),
+    }
+
+
+def _cross_layer_params(cfg, lr):
+    lrs = cm.split_rngs(lr, ["xattn", "mlp"])
+    return {
+        "ln1": cm.norm_params(cfg),
+        "xattn": cm.attention_params(cfg, lrs["xattn"]),
+        "ln2": cm.norm_params(cfg),
+        "mlp": cm.mlp_params(cfg, lrs["mlp"]),
+        "gate_attn": jnp.zeros(()),
+        "gate_mlp": jnp.zeros(()),
+    }
+
+
+def init_params(cfg: ModelConfig, rng):
+    ns, nself = _n_super(cfg)
+    r = cm.split_rngs(rng, ["embed", "super", "norm"])
+
+    def make_super(lr):
+        lrs = cm.split_rngs(lr, ["self", "cross"])
+        return {
+            "self": cm.stack_layer_params(
+                lambda slr: _self_layer_params(cfg, slr), lrs["self"], nself),
+            "cross": _cross_layer_params(cfg, lrs["cross"]),
+        }
+
+    return {
+        "embed": cm.embed_params(cfg, r["embed"]),
+        "super": cm.stack_layer_params(make_super, r["super"], ns),
+        "final_norm": cm.norm_params(cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig, params, ctx: ParallelContext):
+    axis = ctx.model_axis
+    norm2 = {"scale": P(None, None, None)}  # (ns, nself, d)
+    norm1 = {"scale": P(None, None)}
+
+    def attn_specs(stack_dims):
+        base = cm.attention_specs(cfg, axis, stacked=False)
+        return jax.tree.map(
+            lambda s: P(*((None,) * stack_dims), *s), base,
+            is_leaf=lambda x: isinstance(x, P))
+
+    sup = params["super"]
+    self_mlp = jax.tree.map(
+        lambda s: P(None, *s) if isinstance(s, P) else s,
+        cm.mlp_specs(cfg, sup["self"]["mlp"], axis),
+        is_leaf=lambda x: isinstance(x, P))
+    return {
+        "embed": cm.embed_specs(cfg, axis, ctx.axis_size(axis)),
+        "super": {
+            "self": {"ln1": dict(norm2), "attn": attn_specs(2),
+                     "ln2": dict(norm2), "mlp": self_mlp},
+            "cross": {"ln1": dict(norm1), "xattn": attn_specs(1),
+                      "ln2": dict(norm1),
+                      "mlp": cm.mlp_specs(cfg, sup["cross"]["mlp"], axis),
+                      "gate_attn": P(None), "gate_mlp": P(None)},
+        },
+        "final_norm": {"scale": P(None)},
+    }
+
+
+def _cross_layer_fwd(cfg, ctx):
+    def body(x, lp, patches):
+        h = cm.attention_forward(cfg, lp["xattn"],
+                                 cm.apply_norm(cfg, lp["ln1"], x), ctx,
+                                 kv_x=patches, causal=False)
+        x = x + jnp.tanh(lp["gate_attn"]) * h
+        h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
+                           ctx)
+        return x + jnp.tanh(lp["gate_mlp"]) * h
+    return body
+
+
+def forward(cfg: ModelConfig, params, batch, ctx: ParallelContext, *,
+            window=None):
+    """batch: {"tokens": (B, S), "patches": (B, vision_tokens, d)}."""
+    patches = batch["patches"]
+    x = cm.embed_tokens(cfg, params["embed"], batch["tokens"], ctx)
+    self_fwd = tfm._layer(cfg, ctx, window)
+    cross_fwd = _cross_layer_fwd(cfg, ctx)
+
+    def super_body(x, sp, _):
+        x = cm.scan_layers(self_fwd, x, sp["self"], ctx)
+        return cross_fwd(x, sp["cross"], patches)
+
+    x = cm.scan_layers(super_body, x, params["super"], ctx)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    return cm.lm_head(cfg, params["embed"], x, ctx)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, window=None,
+               dtype=jnp.bfloat16):
+    ns, nself = _n_super(cfg)
+    kvh, _, _ = cm.head_grid(cfg)
+    hd = cfg.head_dim
+    cap = min(seq_len, window) if window else seq_len
+    return {
+        "self": {"k": jnp.zeros((ns, nself, batch, cap, kvh, hd), dtype),
+                 "v": jnp.zeros((ns, nself, batch, cap, kvh, hd), dtype)},
+        "cross_k": jnp.zeros((ns, batch, cfg.vision_tokens, kvh, hd), dtype),
+        "cross_v": jnp.zeros((ns, batch, cfg.vision_tokens, kvh, hd), dtype),
+    }
+
+
+def cache_specs(cfg: ModelConfig, ctx: ParallelContext):
+    s = P(None, None, ctx.batch_spec, ctx.model_axis, None, None)
+    xs = P(None, ctx.batch_spec, None, None, None)
+    return {"self": {"k": s, "v": s}, "cross_k": xs, "cross_v": xs}
+
+
+def precompute_cross(cfg: ModelConfig, params, patches, ctx: ParallelContext):
+    """Fill cross K/V from patch embeddings (prefill-time, vision fixed)."""
+    b, t, _ = patches.shape
+    kvh, _, _ = cm.head_grid(cfg)
+    hd = cfg.head_dim
+
+    def per_super(sp):
+        xa = sp["cross"]["xattn"]
+        k = (patches @ xa["wk"]).reshape(b, t, kvh, hd)
+        v = (patches @ xa["wv"]).reshape(b, t, kvh, hd)
+        return k, v
+
+    return jax.vmap(per_super)(params["super"])
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
+                ctx: ParallelContext, *, window=None):
+    x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
+
+    def self_body(x, xs):
+        lp, lc = xs
+        h, nc = cm.attention_decode(cfg, lp["attn"],
+                                    cm.apply_norm(cfg, lp["ln1"], x),
+                                    lc, pos, ctx, window=window)
+        x = x + h
+        h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
+                           ctx)
+        return (x + h).astype(carry_dtype), nc
+
+    def super_body(x, xs):
+        sp, (sc, xk, xv) = xs
+        x, nsc = jax.lax.scan(self_body, x, (sp["self"], sc))
+        cp = sp["cross"]
+        b = x.shape[0]
+        q = (cm.apply_norm(cfg, cp["ln1"], x) @ cp["xattn"]["wq"]).reshape(
+            b, 1, cm.head_grid(cfg)[2], cfg.head_dim)
+        out = cm._sdpa(cfg, ctx, q, xk.astype(x.dtype), xv.astype(x.dtype),
+                       None)
+        x = x + jnp.tanh(cp["gate_attn"]) * (out @ cp["xattn"]["wo"])
+        h = cm.mlp_forward(cfg, cp["mlp"], cm.apply_norm(cfg, cp["ln2"], x),
+                           ctx)
+        x = x + jnp.tanh(cp["gate_mlp"]) * h
+        return x.astype(carry_dtype), nsc
+
+    carry_dtype = x.dtype
+    x, nself = jax.lax.scan(
+        super_body, x,
+        (params["super"], (cache["self"],
+                           cache["cross_k"], cache["cross_v"])))
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.lm_head(cfg, params["embed"], x, ctx)
+    return logits[:, 0], {"self": nself, "cross_k": cache["cross_k"],
+                          "cross_v": cache["cross_v"]}

@@ -1,0 +1,26 @@
+"""Token sampling: greedy / temperature / top-k (pure jnp, jit-able)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0     # 0 -> greedy
+    top_k: Optional[int] = None
+
+
+def sample(rng, logits: jax.Array, cfg: SamplingConfig) -> jax.Array:
+    """logits: (B, V) -> token ids (B,)."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k:
+        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

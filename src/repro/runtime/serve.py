@@ -1,0 +1,132 @@
+"""Serving engine: prefill + decode steps over any registry model.
+
+``Engine`` owns jitted ``prefill`` and ``decode_step`` closures.  Prefill
+runs the full forward and writes the prompt's KV into the cache by
+replaying tokens through ``decode_step``'s cache writer in one fused scan
+for attention archs; recurrent archs thread their O(1) state natively.
+
+The engine is deliberately single-program: batching across requests is the
+scheduler's job (``runtime/scheduler.py``) — requests are padded into the
+fixed (B, S) program shapes so one compiled executable serves all traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParallelContext, REPLICATED
+from repro.models.registry import Model, build_model
+from repro.runtime import sampling
+
+
+@dataclasses.dataclass
+class Engine:
+    model: Model
+    params: Any
+    ctx: ParallelContext = REPLICATED
+    max_seq: int = 2048
+    window: Optional[int] = None
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        mod = self.model
+
+        def prefill_logits(params, batch):
+            return mod.forward(params, batch, self.ctx, window=self.window)
+
+        def decode(params, cache, tokens, pos):
+            return mod.decode_step(params, cache, tokens, pos, self.ctx,
+                                   window=self.window)
+
+        self._prefill = jax.jit(prefill_logits)
+        self._decode = jax.jit(decode, donate_argnums=1)
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int):
+        cache = self.model.init_cache(batch, self.max_seq,
+                                      window=self.window)
+        cfg = self.model.cfg
+        if cfg.family in ("audio", "vlm"):
+            # cross K/V filled at prefill (precompute_cross)
+            pass
+        return cache
+
+    def prefill(self, batch_inputs: dict, cache, prompt_len: jax.Array):
+        """Run the prompt; returns (last_logits (B, V), cache).
+
+        ``batch_inputs["tokens"]``: (B, S) right-padded prompts;
+        ``prompt_len``: (B,) true lengths.  The cache is filled by replaying
+        tokens through the decode path (one lax.scan over S) — identical
+        numerics to the decode program that follows.
+        """
+        tokens = batch_inputs["tokens"]
+        b, s = tokens.shape
+        cfg = self.model.cfg
+
+        if cfg.family == "audio":
+            from repro.models import whisper
+
+            enc = whisper.encode(cfg, self.params, batch_inputs["frames"],
+                                 self.ctx)
+            ks, vs = whisper.precompute_cross(cfg, self.params, enc, self.ctx)
+            cache = dict(cache, cross_k=ks.astype(cache["cross_k"].dtype),
+                         cross_v=vs.astype(cache["cross_v"].dtype))
+        if cfg.family == "vlm":
+            from repro.models import vision_llama
+
+            ks, vs = vision_llama.precompute_cross(
+                cfg, self.params, batch_inputs["patches"], self.ctx)
+            cache = dict(cache, cross_k=ks.astype(cache["cross_k"].dtype),
+                         cross_v=vs.astype(cache["cross_v"].dtype))
+
+        decode = self._decode
+
+        def scan_fn(carry, t):
+            cache, last = carry
+            logits, cache = decode(self.params, cache, tokens[:, t], t)
+            keep = (t == prompt_len - 1)[:, None]
+            last = jnp.where(keep, logits, last)
+            return (cache, last), None
+
+        # python loop over prompt positions (jit'd step): keeps memory flat
+        # and matches decode numerics exactly.
+        last = jnp.zeros((b, cfg.vocab_size), jnp.float32)
+        carry = (cache, last)
+        for t in range(s):
+            carry, _ = scan_fn(carry, jnp.int32(t))
+        cache, last = carry
+        return last, cache
+
+    def generate(self, rng, batch_inputs: dict, prompt_len, *,
+                 max_new_tokens: int = 32,
+                 scfg: sampling.SamplingConfig = sampling.SamplingConfig()):
+        """Batched generation; returns (B, max_new_tokens) token ids."""
+        tokens = batch_inputs["tokens"]
+        b, s = tokens.shape
+        prompt_len = jnp.asarray(prompt_len, jnp.int32)
+        cache = self.init_cache(b)
+        logits, cache = self.prefill(batch_inputs, cache, prompt_len)
+
+        out = []
+        pos = prompt_len.max()
+        tok = sampling.sample(rng, logits, scfg)
+        out.append(tok)
+        for i in range(max_new_tokens - 1):
+            rng, sub = jax.random.split(rng)
+            logits, cache = self._decode(self.params, cache, tok, pos + i)
+            tok = sampling.sample(sub, logits, scfg)
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+
+def make_engine(cfg, rng=None, *, ctx: ParallelContext = REPLICATED,
+                max_seq: int = 2048, window=None) -> Engine:
+    model = build_model(cfg)
+    params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
+    return Engine(model=model, params=params, ctx=ctx, max_seq=max_seq,
+                  window=window)

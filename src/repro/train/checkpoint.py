@@ -1,0 +1,80 @@
+"""npz-based checkpointing (no orbax dependency).
+
+Pytrees are flattened to ``path/sep/arated/keys`` -> arrays.  Static
+dataclass fields (QuantizedLinear.kind etc.) are reconstructed from the
+template pytree on restore, so quantized deployment plans round-trip.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: Any, *, step: int | None = None) -> str:
+    """Save pytree to ``path`` (.npz).  Returns the file written."""
+    if step is not None:
+        root, ext = os.path.splitext(path)
+        path = f"{root}_step{step:08d}{ext or '.npz'}"
+    if not path.endswith(".npz"):
+        path += ".npz"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+    return path
+
+
+def restore(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    with np.load(path) as data:
+        leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for kpath, leaf in leaves_t:
+            key = _SEP.join(_path_str(p) for p in kpath)
+            if key not in data:
+                raise KeyError(f"checkpoint {path} missing {key}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != template "
+                    f"{leaf.shape}")
+            out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+
+
+def latest(dirpath: str, prefix: str) -> str | None:
+    """Newest ``<prefix>_stepNNNNNNNN.npz`` in ``dirpath``."""
+    if not os.path.isdir(dirpath):
+        return None
+    pat = re.compile(re.escape(prefix) + r"_step(\d+)\.npz$")
+    best, best_step = None, -1
+    for f in os.listdir(dirpath):
+        m = pat.match(f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(dirpath, f), int(m.group(1))
+    return best

@@ -1,0 +1,99 @@
+"""Pure-JAX AdamW with cosine schedule and global-norm clipping.
+
+No optax dependency: state is a plain pytree ``{"m", "v", "step"}`` so it
+shards with the same PartitionSpecs as the params (m/v inherit the param
+spec; step is replicated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to ``min_lr_frac * lr``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_state(params: Any) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(param_specs: Any) -> dict:
+    """Optimizer-state PartitionSpecs mirroring the param specs."""
+    from jax.sharding import PartitionSpec as P
+
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(cfg: AdamWConfig, params: Any, grads: Any,
+                  state: dict) -> tuple[Any, dict]:
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    b1, b2 = cfg.betas
+
+    if cfg.clip_norm is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    lr = cosine_lr(cfg, step)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step_dir = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        newp = p.astype(jnp.float32) - lr * (
+            step_dir + cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        np_, nm, nv = upd(p, g, m, v)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return (jax.tree.unflatten(treedef, new_p),
+            {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v),
+             "step": step})

@@ -1,0 +1,73 @@
+"""Causal-LM loss and the jit-able train step factory.
+
+Training runs on the *dense* (unquantized) model: GPTQ int4 weights are an
+inference deployment artifact (the paper's subject), produced afterwards by
+``repro.quant.gptq.quantize_model``.  Configs used for training therefore
+carry ``quant.mode == "none"``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParallelContext
+from repro.models.registry import Model
+from repro.train import optimizer as opt
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_index: int = -1) -> jax.Array:
+    """Mean token cross-entropy.  logits: (B, S, V), labels: (B, S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_index).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(model: Model, params, batch, ctx: ParallelContext,
+            *, window=None) -> jax.Array:
+    logits = model.forward(params, batch, ctx, window=window)
+    return cross_entropy(logits[:, :-1], batch["labels"][:, :-1])
+
+
+def make_train_step(model: Model, ctx: ParallelContext,
+                    ocfg: opt.AdamWConfig, *, window=None):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``state = {"params", "opt"}``; donate it at the jit call site
+    (``donate_argnums=0``) so param buffers are reused in place.
+    """
+
+    def train_step(state, batch):
+        def lf(p):
+            return loss_fn(model, p, batch, ctx, window=window)
+
+        loss, grads = jax.value_and_grad(lf)(state["params"])
+        params, ostate = opt.apply_updates(ocfg, state["params"], grads,
+                                           state["opt"])
+        metrics = {
+            "loss": loss,
+            "grad_norm": opt.global_norm(grads),
+            "lr": opt.cosine_lr(ocfg, ostate["step"]),
+            "step": ostate["step"],
+        }
+        return {"params": params, "opt": ostate}, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, rng) -> dict:
+    params = model.init(rng)
+    return {"params": params, "opt": opt.init_state(params)}
+
+
+def train_state_specs(model: Model, params, ctx: ParallelContext) -> dict:
+    pspecs = model.param_specs(params, ctx)
+    return {"params": pspecs, "opt": opt.state_specs(pspecs)}

@@ -1,0 +1,137 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization as qz
+from repro.kernels import dequant_matmul as dk, ops, ref
+
+
+def _mk(seed, k, n, gs, act_order=True):
+    r1, r2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(r1, (k, n))
+    return qz.quantize(w, gs, act_order=act_order, rng=r2)
+
+
+@pytest.mark.parametrize("m,k,n,gs", [
+    (8, 128, 128, 32),
+    (16, 256, 384, 64),
+    (128, 512, 256, 128),
+    (1, 256, 128, 64),      # decode-like M=1
+    (4, 1024, 128, 128),    # deep K
+])
+def test_ordered_kernel_sweep(m, k, n, gs):
+    res = _mk(m * 3 + k, k, n, gs)
+    x = jax.random.normal(jax.random.PRNGKey(9), (m, k))
+    ql = res.ordered
+    y = dk.dequant_matmul_ordered(x, ql.qweight, ql.scales, ql.zeros,
+                                  group_size=gs)
+    y_ref = ref.dequant_matmul_ordered(x, ql.qweight, ql.scales, ql.zeros,
+                                       group_size=gs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n,gs", [
+    (8, 128, 128, 32),
+    (16, 256, 384, 64),
+    (32, 512, 256, 128),
+])
+def test_gidx_kernel_sweep(m, k, n, gs):
+    res = _mk(m * 5 + n, k, n, gs)
+    x = jax.random.normal(jax.random.PRNGKey(10), (m, k))
+    ql = res.naive
+    y = dk.dequant_matmul_gidx(x, ql.qweight, ql.scales, ql.zeros, ql.g_idx)
+    y_ref = ref.dequant_matmul_gidx(x, ql.qweight, ql.scales, ql.zeros,
+                                    ql.g_idx)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("k,n,gs", [(128, 128, 32), (512, 384, 128)])
+def test_dequantize_kernel(k, n, gs):
+    res = _mk(k + n, k, n, gs)
+    ql = res.ordered
+    y = dk.dequantize_ordered(ql.qweight, ql.scales, ql.zeros, group_size=gs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref.dequantize(ql)),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ops_wrapper_dtypes_and_padding(dtype):
+    """ops.dequant_matmul handles leading batch dims + non-tile N/M."""
+    res = _mk(42, 128, 96, 32)   # N=96 not a multiple of 128 -> padded
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 3, 128)).astype(dtype)
+    for ql in (res.ordered, res.naive):
+        y = ops.dequant_matmul(x, ql, compute_dtype=jnp.float32)
+        y_ref = ref.dequant_matmul(x.astype(jnp.float32), ql)
+        assert y.shape == (2, 3, 96)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_kernel_matches_scheme_forward():
+    """backend='pallas' pair forward == backend='jnp'."""
+    from repro.core import reorder, schemes
+
+    rng = jax.random.PRNGKey(12)
+    r = jax.random.split(rng, 3)
+    pp = reorder.plan_pair(
+        jax.random.normal(r[0], (128, 256)),
+        jax.random.normal(r[1], (256, 128)),
+        scheme="tp-aware", group_size_up=32, group_size_down=32, rng=rng)
+    x = jax.random.normal(r[2], (8, 128))
+    y_jnp = schemes.pair_forward_reference(x, pp, activation="silu",
+                                           backend="jnp")
+    y_pal = schemes.pair_forward_reference(x, pp, activation="silu",
+                                           backend="pallas")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_pick_block_k():
+    assert dk.pick_block_k(1024, 128) % 128 == 0
+    assert 1024 % dk.pick_block_k(1024, 128) == 0
+    assert dk.pick_block_k(608, 76) % 76 == 0
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,s,d,causal,window,bq,bk", [
+    (1, 2, 128, 32, True, None, 64, 64),
+    (2, 2, 256, 64, True, None, 128, 128),
+    (1, 1, 128, 32, False, None, 64, 64),
+    (1, 2, 256, 32, True, 64, 64, 64),
+    (1, 2, 128, 32, True, None, 128, 32),   # uneven q/k blocks
+])
+def test_flash_attention_sweep(b, h, s, d, causal, window, bq, bk):
+    from repro.kernels import ops
+
+    r1, r2, r3 = jax.random.split(jax.random.PRNGKey(b * s + d), 3)
+    q = jax.random.normal(r1, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(r2, (b, h, s, d), jnp.float32)
+    v = jax.random.normal(r3, (b, h, s, d), jnp.float32)
+    y = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=bq, block_k=bk)
+    y_ref = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_attention_dtypes(dtype):
+    from repro.kernels import ops
+
+    r = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(rr, (1, 2, 128, 32)).astype(dtype)
+               for rr in r)
+    y = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    y_ref = ref.flash_attention(q, k, v)
+    assert y.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+        rtol=2e-2, atol=2e-2)

@@ -1,0 +1,159 @@
+"""Unit + property tests for GPTQ-style group quantization (core/)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as qz
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 16, size=(64, 24)).astype(np.int32)
+    packed = qz.pack_int4(jnp.asarray(q))
+    assert packed.shape == (8, 24) and packed.dtype == jnp.uint32
+    out = qz.unpack_int4(packed)
+    np.testing.assert_array_equal(np.asarray(out), q)
+
+
+@given(k8=st.integers(1, 8), n=st.integers(1, 17))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_property(k8, n):
+    rng = np.random.default_rng(k8 * 100 + n)
+    q = rng.integers(0, 16, size=(k8 * 8, n)).astype(np.int32)
+    out = qz.unpack_int4(qz.pack_int4(jnp.asarray(q)))
+    np.testing.assert_array_equal(np.asarray(out), q)
+
+
+def test_choose_group_size():
+    assert qz.choose_group_size(1024, 128) == 128
+    assert qz.choose_group_size(608, 128) == 76
+    assert qz.choose_group_size(100, 128) == 100
+    assert qz.choose_group_size(304, 128) == 76
+    with pytest.raises(ValueError):
+        qz.choose_group_size(0)
+
+
+def test_rtn_error_bound():
+    """|W - dq(q(W))| <= scale/2 per element (RTN with exact zero point)."""
+    rng = jax.random.PRNGKey(0)
+    w = jax.random.normal(rng, (128, 32))
+    res = qz.quantize(w, group_size=32, act_order=False)
+    dq = qz.dequantize(res.naive)
+    g_idx = jnp.arange(128) // 32
+    bound = jnp.take(res.naive.scales, g_idx, axis=0) * 0.5 + 1e-6
+    assert bool(jnp.all(jnp.abs(w - dq) <= bound))
+
+
+def test_actorder_layouts_equivalent():
+    """naive and ordered layouts dequantize to the same logical matrix."""
+    rng = jax.random.PRNGKey(1)
+    w = jax.random.normal(rng, (256, 16))
+    res = qz.quantize(w, group_size=64, act_order=True, rng=rng)
+    dq_naive = qz.dequantize(res.naive)                 # original order
+    dq_sorted = qz.dequantize(res.ordered)              # sorted rows
+    # scatter sorted rows back to original positions
+    restored = jnp.zeros_like(dq_sorted).at[res.perm].set(dq_sorted)
+    np.testing.assert_allclose(np.asarray(dq_naive), np.asarray(restored),
+                               rtol=0, atol=0)
+
+
+def test_g_idx_matches_eq3():
+    """g_idx[i] = floor(phi(i) / G) for the emulated permutation (Eq. 3)."""
+    rng = jax.random.PRNGKey(2)
+    k, g = 128, 32
+    w = jax.random.normal(rng, (k, 8))
+    res = qz.quantize(w, group_size=g, act_order=True, rng=rng)
+    g_idx = np.asarray(res.g_idx)
+    # every group must contain exactly G rows
+    counts = np.bincount(g_idx, minlength=k // g)
+    assert (counts == g).all()
+    # perm sorts g_idx
+    assert (np.diff(g_idx[np.asarray(res.perm)]) >= 0).all()
+
+
+def test_importance_actorder_groups_by_importance():
+    """High-importance rows land in the first quant groups."""
+    k, g = 64, 16
+    rng = jax.random.PRNGKey(3)
+    w = jax.random.normal(rng, (k, 4))
+    imp = jnp.arange(k, dtype=jnp.float32)          # row k-1 most important
+    res = qz.quantize(w, group_size=g, act_order=True, importance=imp)
+    g_idx = np.asarray(res.g_idx)
+    # the 16 most important rows (largest indices) must be group 0
+    assert (g_idx[-g:] == 0).all()
+
+
+def test_gptq_hessian_reduces_error():
+    """GPTQ error feedback beats RTN on a correlated-input quadratic loss."""
+    rng = jax.random.PRNGKey(4)
+    k, n, g = 64, 32, 16
+    r1, r2 = jax.random.split(rng)
+    w = jax.random.normal(r1, (k, n))
+    x = jax.random.normal(r2, (512, k))
+    # correlated calibration inputs
+    mix = jnp.eye(k) + 0.4 * jax.random.normal(jax.random.PRNGKey(5), (k, k)) / k ** 0.5
+    xc = x @ mix
+    h = qz.make_hessian(xc)
+
+    res_rtn = qz.quantize(w, g, act_order=False, use_gptq=False)
+    res_gptq = qz.quantize(w, g, act_order=False, use_gptq=True, hessian=h)
+
+    y = xc @ w
+    err_rtn = jnp.mean(jnp.square(y - xc @ qz.dequantize(res_rtn.naive)))
+    err_gptq = jnp.mean(jnp.square(y - xc @ qz.dequantize(res_gptq.naive)))
+    assert float(err_gptq) < float(err_rtn)
+
+
+def test_actorder_with_hessian_importance_reduces_error():
+    """desc_act (process important rows first) reduces task error further."""
+    rng = jax.random.PRNGKey(6)
+    k, n, g = 64, 32, 16
+    r1, r2 = jax.random.split(rng)
+    w = jax.random.normal(r1, (k, n))
+    # skewed input importance: some channels much larger
+    scale_vec = jnp.exp(jnp.linspace(0, 3, k))
+    x = jax.random.normal(r2, (512, k)) * scale_vec
+    h = qz.make_hessian(x)
+
+    res_plain = qz.quantize(w, g, act_order=False, use_gptq=True, hessian=h)
+    res_ao = qz.quantize(w, g, act_order=True, use_gptq=True, hessian=h)
+
+    y = x @ w
+    err_plain = jnp.mean(jnp.square(y - x @ qz.dequantize(res_plain.naive)))
+    err_ao = jnp.mean(jnp.square(y - x @ qz.dequantize(res_ao.naive)))
+    assert float(err_ao) < float(err_plain)
+
+
+def test_permute_columns_commutes():
+    """Column permutation of the packed form == permuting dequantized W."""
+    rng = jax.random.PRNGKey(7)
+    w = jax.random.normal(rng, (64, 48))
+    res = qz.quantize(w, 16, act_order=True, rng=rng)
+    p = jax.random.permutation(jax.random.PRNGKey(8), 48)
+    dq_then_perm = qz.dequantize(res.ordered)[:, p]
+    perm_then_dq = qz.dequantize(qz.permute_columns(res.ordered, p))
+    np.testing.assert_array_equal(np.asarray(dq_then_perm),
+                                  np.asarray(perm_then_dq))
+
+
+@given(
+    kg=st.integers(2, 6), n=st.integers(4, 24), gs_pow=st.integers(3, 5),
+    act=st.booleans(),
+)
+@settings(max_examples=15, deadline=None)
+def test_quantize_roundtrip_property(kg, n, gs_pow, act):
+    gs = 2 ** gs_pow
+    k = kg * gs
+    rng = jax.random.PRNGKey(kg * 1000 + n * 10 + gs_pow)
+    w = jax.random.normal(rng, (k, n)) * 3.0
+    res = qz.quantize(w, gs, act_order=act, rng=rng)
+    # both layouts agree and error is bounded by the per-group scale
+    dq = qz.dequantize(res.naive)
+    g_idx = np.asarray(res.g_idx)
+    bound = np.take(np.asarray(res.naive.scales), g_idx, axis=0) * 0.5 + 1e-5
+    assert (np.abs(np.asarray(w - dq)) <= bound).all()
+    restored = jnp.zeros_like(dq).at[res.perm].set(qz.dequantize(res.ordered))
+    np.testing.assert_array_equal(np.asarray(dq), np.asarray(restored))

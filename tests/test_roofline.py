@@ -1,0 +1,71 @@
+"""Roofline HLO parser + mesh helpers."""
+
+import jax
+import pytest
+
+from repro.launch import roofline
+
+
+HLO = """
+ENTRY %main {
+  %x = f32[8,128]{1,0} parameter(0)
+  %ag = f32[8,512]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={1}
+  %ar = bf16[8,512]{1,0} all-reduce(%y), replica_groups=[4,2]<=[8], to_apply=%add
+  %rs = f32[8,64]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={1}
+  %cp = f32[4,16]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %aa = f32[2,8]{1,0} all-to-all(%v), replica_groups={{0,1}}
+}
+"""
+
+
+def test_parse_collective_bytes():
+    out = roofline.parse_collective_bytes(HLO, chips=8)
+    ag = 8 * 512 * 4 * 3 / 4                    # (g-1)/g of result
+    ar = 8 * 512 * 2 * 2 * 1 / 2                # iota groups [4,2]: g=2
+    rs = 8 * 64 * 4 * 7                         # (g-1) x result
+    cp = 4 * 16 * 4
+    aa = 2 * 8 * 4 * 1 / 2
+    assert out["all-gather"] == pytest.approx(ag)
+    assert out["all-reduce"] == pytest.approx(ar)
+    assert out["reduce-scatter"] == pytest.approx(rs)
+    assert out["collective-permute"] == pytest.approx(cp)
+    assert out["all-to-all"] == pytest.approx(aa)
+    assert out["total_per_device"] == pytest.approx(ag + ar + rs + cp + aa)
+    assert out["counts"]["all-gather"] == 1
+
+
+def test_roofline_terms_and_bottleneck():
+    rl = roofline.Roofline(
+        arch="a", shape="s", mesh="16x16", chips=256,
+        hlo_flops=1e18, hlo_bytes=1e12, collective_bytes=1e15,
+        model_flops=5e17)
+    assert rl.t_compute == pytest.approx(1e18 / (256 * roofline.PEAK_FLOPS))
+    assert rl.t_memory == pytest.approx(1e12 / (256 * roofline.HBM_BW))
+    assert rl.t_collective == pytest.approx(1e15 / (256 * roofline.ICI_BW))
+    assert rl.bottleneck == "collective"
+    assert rl.useful_flops_frac == pytest.approx(0.5)
+    j = rl.to_json()
+    assert j["bottleneck"] == "collective"
+
+
+def test_fmt_helpers():
+    assert roofline.fmt_seconds(2e-6) == "2.0us"
+    assert roofline.fmt_seconds(0.5) == "500.00ms"
+    assert roofline.fmt_bytes(2048) == "2.0KB"
+
+
+def test_probe_plan_units():
+    """probe_plan covers every family with 0/1-unit scan configs."""
+    from repro.configs import ARCH_IDS, get_config
+    from repro.launch.dryrun import probe_plan
+
+    for aid in ARCH_IDS:
+        cfg = get_config(aid)
+        probes, combine = probe_plan(cfg)
+        assert len(probes) >= 2
+        # combiner over degenerate equal costs returns that cost
+        c0 = {"flops": 1.0, "bytes": 2.0, "coll": 3.0, "counts": {}}
+        costs = {k: dict(c0) for k in probes}
+        out = combine(costs)
+        assert out["flops"] == pytest.approx(1.0)
+        assert out["bytes"] == pytest.approx(2.0)

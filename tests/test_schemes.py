@@ -1,0 +1,151 @@
+"""Exactness of the three deployment schemes (paper Algorithms 1-3).
+
+The paper's central correctness claim: naive-actorder, exllama (Alg. 1/2)
+and tp-aware (Alg. 3) are *the same arithmetic* — only data layout and
+communication differ.  Outputs must agree to f32 reduction tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as qz, reorder, schemes
+
+
+def _mk_pair(seed, k1, n1, n2, gs, scheme, gate=True):
+    rng = jax.random.PRNGKey(seed)
+    r = jax.random.split(rng, 4)
+    w_up = jax.random.normal(r[0], (k1, n1))
+    w_gate = jax.random.normal(r[1], (k1, n1)) if gate else None
+    w_down = jax.random.normal(r[2], (n1, n2))
+    pp = reorder.plan_pair(w_up, w_down, w_gate=w_gate, scheme=scheme,
+                           group_size_up=gs, group_size_down=gs, rng=rng)
+    x = jax.random.normal(r[3], (8, k1))
+    return pp, x, (w_up, w_gate, w_down)
+
+
+def test_reorder_function():
+    """Algorithm 1: returns (P, sorted g_idx)."""
+    g_idx = jnp.asarray([2, 0, 1, 0, 2, 1], jnp.int32)
+    p, sorted_g = reorder.reorder(g_idx)
+    assert (np.diff(np.asarray(sorted_g)) >= 0).all()
+    np.testing.assert_array_equal(np.asarray(g_idx)[np.asarray(p)],
+                                  np.asarray(sorted_g))
+
+
+@pytest.mark.parametrize("gate", [True, False])
+@pytest.mark.parametrize("act", ["silu", "gelu", "relu2"])
+def test_schemes_same_arithmetic(gate, act):
+    outs = {}
+    for scheme in reorder.SCHEMES:
+        pp, x, _ = _mk_pair(0, 128, 256, 128, 64, scheme, gate)
+        outs[scheme] = np.asarray(
+            schemes.pair_forward_reference(x, pp, activation=act))
+    ref = outs["naive-actorder"]
+    scale = np.abs(ref).max()
+    for scheme in ("exllama", "tp-aware"):
+        np.testing.assert_allclose(outs[scheme], ref, atol=2e-4 * scale,
+                                   err_msg=scheme)
+
+
+def test_quantization_close_to_fp():
+    pp, x, (w_up, w_gate, w_down) = _mk_pair(1, 128, 256, 128, 32,
+                                             "tp-aware")
+    y_q = schemes.pair_forward_reference(x, pp, activation="silu")
+    y_fp = (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+    rel = float(jnp.abs(y_q - y_fp).max() / jnp.abs(y_fp).max())
+    assert rel < 0.5, rel   # int4 group quant on random normals
+
+
+@given(
+    k1g=st.integers(2, 4), n1g=st.integers(2, 6), n2=st.integers(8, 64),
+    gsp=st.integers(4, 6), scheme=st.sampled_from(reorder.SCHEMES),
+    gate=st.booleans(),
+)
+@settings(max_examples=12, deadline=None)
+def test_scheme_equivalence_property(k1g, n1g, n2, gsp, scheme, gate):
+    gs = 2 ** gsp
+    k1, n1 = k1g * gs, n1g * gs
+    pp, x, _ = _mk_pair(k1g * 7 + n1g, k1, n1, n2, gs, scheme, gate)
+    ppn, xn, _ = _mk_pair(k1g * 7 + n1g, k1, n1, n2, gs, "naive-actorder",
+                          gate)
+    y = np.asarray(schemes.pair_forward_reference(x, pp, activation="silu"))
+    yn = np.asarray(schemes.pair_forward_reference(xn, ppn,
+                                                   activation="silu"))
+    scale = max(np.abs(yn).max(), 1.0)
+    np.testing.assert_allclose(y, yn, atol=3e-4 * scale)
+
+
+def test_shard_pair_slices_consistent():
+    """shard_pair shards reproduce the full pair's dequantized weights."""
+    pp, x, _ = _mk_pair(2, 128, 256, 128, 32, "tp-aware")
+    tp = 4
+    shards = reorder.shard_pair(pp, tp)
+    n_shard = pp.n1 // tp
+    w_up_full = qz.dequantize(pp.up)
+    w_down_full = qz.dequantize(pp.down)
+    for r, sh in enumerate(shards):
+        np.testing.assert_array_equal(
+            np.asarray(qz.dequantize(sh.up)),
+            np.asarray(w_up_full[:, r * n_shard:(r + 1) * n_shard]))
+        np.testing.assert_array_equal(
+            np.asarray(qz.dequantize(sh.down)),
+            np.asarray(w_down_full[r * n_shard:(r + 1) * n_shard]))
+        np.testing.assert_array_equal(
+            np.asarray(sh.p2),
+            np.asarray(pp.p2[r * n_shard:(r + 1) * n_shard]))
+
+
+def test_shard_pair_group_misalignment_raises():
+    pp, _, _ = _mk_pair(3, 128, 256, 128, 64, "tp-aware")
+    with pytest.raises(ValueError, match="not aligned"):
+        reorder.shard_pair(pp, 8)   # 256/8 = 32 < group 64
+
+
+def test_sharded_forward_matches_full():
+    """Manually-sharded per-rank compute (paper Alg. 3 data flow) == full."""
+    pp, x, _ = _mk_pair(4, 128, 256, 128, 32, "tp-aware")
+    tp = 4
+    shards = reorder.shard_pair(pp, tp)
+    y_full = schemes.pair_forward_reference(x, pp, activation="silu")
+    acc = 0.0
+    for sh in shards:
+        # per-rank: local up/gate GEMM -> act -> local down GEMM; then SUM
+        acc = acc + schemes.pair_forward_reference(x, sh, activation="silu")
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(y_full),
+                               atol=2e-4 * float(np.abs(y_full).max()))
+
+
+def test_shared_p1_gather(recwarn):
+    """share_p1 (beyond-paper): gate quantized in up's processing order —
+    one runtime gather serves both column-TP GEMMs, outputs unchanged."""
+    rng = jax.random.PRNGKey(11)
+    r = jax.random.split(rng, 4)
+    w_up = jax.random.normal(r[0], (128, 256))
+    w_gate = jax.random.normal(r[1], (128, 256))
+    w_down = jax.random.normal(r[2], (256, 128))
+    x = jax.random.normal(r[3], (8, 128))
+
+    pp_shared = reorder.plan_pair(w_up, w_down, w_gate=w_gate,
+                                  scheme="tp-aware", group_size_up=32,
+                                  group_size_down=32, rng=rng, share_p1=True)
+    pp_sep = reorder.plan_pair(w_up, w_down, w_gate=w_gate,
+                               scheme="tp-aware", group_size_up=32,
+                               group_size_down=32, rng=rng, share_p1=False)
+    assert pp_shared.p1_gate is None
+    assert pp_sep.p1_gate is not None
+    y_shared = schemes.pair_forward_reference(x, pp_shared, activation="silu")
+    y_sep = schemes.pair_forward_reference(x, pp_sep, activation="silu")
+    # same arithmetic up to quantization-grouping differences of the gate
+    scale = float(np.abs(np.asarray(y_sep)).max())
+    np.testing.assert_allclose(np.asarray(y_shared), np.asarray(y_sep),
+                               atol=0.2 * scale)
+    # and exactly equal to the unquantized-order-independent naive scheme
+    pp_naive = reorder.plan_pair(w_up, w_down, w_gate=w_gate,
+                                 scheme="naive-actorder", group_size_up=32,
+                                 group_size_down=32, rng=rng, share_p1=True)
+    y_naive = schemes.pair_forward_reference(x, pp_naive, activation="silu")
+    np.testing.assert_allclose(np.asarray(y_shared), np.asarray(y_naive),
+                               atol=3e-4 * scale)

@@ -1,0 +1,123 @@
+"""Training substrate: optimizer math, loss descent, checkpoint roundtrip."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.common import REPLICATED
+from repro.models.registry import build_model
+from repro.train import checkpoint, data as data_lib, optimizer as opt
+from repro.train import trainstep
+
+
+def test_adamw_first_step_matches_reference():
+    """After one step from zero state, AdamW ~= -lr * sign-ish update."""
+    ocfg = opt.AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=None,
+                           warmup_steps=0, total_steps=10**9)
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, -0.25])}
+    state = opt.init_state(params)
+    new_params, new_state = opt.apply_updates(ocfg, params, grads, state)
+    # bias-corrected mhat = g, vhat = g^2 -> update = -lr * g/|g| = -lr*sign
+    np.testing.assert_allclose(np.asarray(new_params["w"]),
+                               np.asarray([1.0 - 0.1, -2.0 + 0.1]),
+                               rtol=1e-4)
+    assert int(new_state["step"]) == 1
+
+
+def test_grad_clipping():
+    ocfg = opt.AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+    g = {"w": jnp.full((4,), 100.0)}
+    assert float(opt.global_norm(g)) > 1.0
+    # clipping happens inside apply_updates; check the step magnitude
+    params = {"w": jnp.zeros(4)}
+    state = opt.init_state(params)
+    _, st2 = opt.apply_updates(ocfg, params, g, state)
+    # m after clip: (1-b1) * g_clipped, |g_clipped| = 1
+    m = np.asarray(st2["m"]["w"])
+    np.testing.assert_allclose(np.linalg.norm(m / 0.1), 1.0, rtol=1e-4)
+
+
+def test_cosine_schedule_shape():
+    ocfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                           min_lr_frac=0.1)
+    lrs = [float(opt.cosine_lr(ocfg, jnp.int32(s))) for s in
+           (0, 5, 10, 60, 110, 200)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6          # mid-warmup
+    assert abs(lrs[2] - 1.0) < 1e-6          # peak
+    assert 0.1 < lrs[3] < 1.0                # decaying
+    assert abs(lrs[4] - 0.1) < 1e-6          # floor
+    assert abs(lrs[5] - 0.1) < 1e-6          # clamped past end
+
+
+def test_cross_entropy_matches_manual():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 8))
+    labels = jnp.asarray([[1, 2, 3, 4], [0, 7, -1, 2]])
+    got = trainstep.cross_entropy(logits, labels)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    want, n = 0.0, 0
+    for b in range(2):
+        for t in range(4):
+            if int(labels[b, t]) != -1:
+                want -= float(logp[b, t, int(labels[b, t])])
+                n += 1
+    np.testing.assert_allclose(float(got), want / n, rtol=1e-5)
+
+
+def test_loss_decreases_on_synthetic_data():
+    cfg = get_smoke_config("qwen3-4b").with_quant(mode="none")
+    model = build_model(cfg)
+    state = trainstep.init_train_state(model, jax.random.PRNGKey(0))
+    ocfg = opt.AdamWConfig(lr=1e-3, total_steps=30, warmup_steps=2)
+    step = jax.jit(trainstep.make_train_step(model, REPLICATED, ocfg),
+                   donate_argnums=0)
+    dcfg = data_lib.DataConfig(seq_len=32, global_batch=4,
+                               vocab_size=cfg.vocab_size)
+    it = data_lib.batches(dcfg)
+    losses = []
+    for _ in range(10):
+        state, metrics = step(state, next(it))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert all(np.isfinite(losses))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_smoke_config("granite-3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))    # includes PlannedPairs
+    path = checkpoint.save(str(tmp_path / "ck"), params, step=7)
+    assert path.endswith("_step00000007.npz")
+    restored = checkpoint.restore(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert checkpoint.latest(str(tmp_path), "ck") == path
+
+
+def test_data_pipeline_shapes_and_determinism():
+    dcfg = data_lib.DataConfig(seq_len=16, global_batch=4, vocab_size=97,
+                               seed=3)
+    a = next(data_lib.batches(dcfg))
+    b = next(data_lib.batches(dcfg))
+    assert a["tokens"].shape == (4, 16)
+    assert a["labels"].shape == (4, 16)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    assert int(a["tokens"].max()) < 97
+
+
+def test_file_backed_data(tmp_path):
+    toks = np.arange(1000, dtype=np.uint16) % 50
+    f = tmp_path / "corpus.bin"
+    toks.tofile(str(f))
+    dcfg = data_lib.DataConfig(seq_len=8, global_batch=2, vocab_size=50,
+                               path=str(f))
+    batch = next(data_lib.batches(dcfg))
+    t = np.asarray(batch["tokens"])
+    l = np.asarray(batch["labels"])
+    np.testing.assert_array_equal(t[:, 1:], l[:, :-1])   # shifted by one
