@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import PAPER_PROBLEMS
-from repro.core import reorder, schemes
+from repro.core import reorder
+from repro.core.policy import ExecutionPolicy
 from repro.launch import roofline
 
 from benchmarks.bench_mlp import _mesh, _plan, _collective_bytes
@@ -37,10 +38,11 @@ def run(out_lines: list):
             x = jax.random.normal(jax.random.PRNGKey(1), (m, k1))
             res = {}
             for scheme, pp in plans.items():
+                pol = ExecutionPolicy(scheme=scheme, backend="jnp",
+                                      compute_dtype=jnp.float32)
                 with mesh:
-                    fn = lambda xx, p: schemes.pair_forward_tp(
-                        xx, p, mesh, activation=None,
-                        compute_dtype=jnp.float32)
+                    fn = lambda xx, p, pol=pol: p.forward(
+                        xx, pol, mesh, activation=None)
                     coll = _collective_bytes(fn, (x, pp), mesh)
                 res[scheme] = coll
             base = res["tp-aware"]["total_per_device"]

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import attention_fold as af, quantization as qz
+from repro.core.policy import ExecutionPolicy
 from repro.launch import roofline
 
 
@@ -59,6 +60,24 @@ def run(out_lines: list):
         line = f"quant_mae,{name},{err:.6f}"
         print(line)
         out_lines.append(line)
+
+    # (c) the folded V->O pipeline under the deployment policy: the jnp
+    # and ref dispatch backends must agree on the folded plan's output.
+    rv = jax.random.split(jax.random.PRNGKey(1), 3)
+    w_v = jax.random.normal(rv[0], (d, kv * hd))
+    pp = af.plan_attention_vo(w_v, w_o, n_heads=h, n_kv_heads=kv,
+                              head_dim=hd, group_size=hd, rng=rv[1])
+    x = jax.random.normal(rv[2], (1, 4, d))
+    aw = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(2), (1, h, 4, 4)), axis=-1)
+    ys = {b: af.attention_vo_reference(
+              x, None, aw, pp, n_heads=h, n_kv_heads=kv, head_dim=hd,
+              policy=ExecutionPolicy(backend=b))
+          for b in ("jnp", "ref")}
+    diff = float(jnp.abs(ys["jnp"] - ys["ref"]).max())
+    line = f"fold_policy_backend_agreement,max_abs_diff,{diff:.2e}"
+    print(line)
+    out_lines.append(line)
 
 
 if __name__ == "__main__":

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantization as qz
-from repro.kernels import dequant_matmul as dk
+from repro.core.policy import ExecutionPolicy
+from repro.kernels import dequant_matmul as dk, dispatch
 
 
 def metadata_traffic(k, n, gs, bm, bn, bk, m, *, ordered: bool) -> int:
@@ -44,16 +45,14 @@ def run(out_lines: list):
         bm, bn = min(128, m), 128
         bk = dk.pick_block_k(k, gs)
 
+        # both layouts resolve through the dispatch registry, exactly the
+        # path the deployed policy takes (backend="pallas")
+        pol = ExecutionPolicy(backend="pallas").with_tiling(
+            block_m=bm, block_n=bn)
         for layout, ql in (("ordered", res.ordered), ("gidx", res.naive)):
+            kernel = dispatch.resolve(ql.kind, pol.backend)
             t0 = time.perf_counter()
-            if layout == "ordered":
-                y = dk.dequant_matmul_ordered(
-                    x, ql.qweight, ql.scales, ql.zeros, group_size=gs,
-                    block_m=bm, block_n=bn)
-            else:
-                y = dk.dequant_matmul_gidx(
-                    x, ql.qweight, ql.scales, ql.zeros, ql.g_idx,
-                    block_m=bm, block_n=bn)
+            y = kernel(x, ql, pol)
             jax.block_until_ready(y)
             wall = (time.perf_counter() - t0) * 1e3
             meta = metadata_traffic(k, n, gs, bm, bn, bk, m,

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import PAPER_BATCH_SIZES, PAPER_PROBLEMS
-from repro.core import reorder, schemes
+from repro.core import reorder
+from repro.core.policy import ExecutionPolicy
 from repro.launch import roofline
 
 
@@ -86,12 +87,13 @@ def run(out_lines: list):
                                       jnp.float32)
                 res = {}
                 for scheme, pp in plans.items():
+                    pol = ExecutionPolicy(scheme=scheme, backend="jnp",
+                                          compute_dtype=jnp.float32)
                     # pp passed as a jit ARGUMENT (not closure) so XLA
                     # cannot constant-fold the dequantization at compile
                     with mesh:
-                        fn = lambda xx, p: schemes.pair_forward_tp(
-                            xx, p, mesh, activation=None,
-                            compute_dtype=jnp.float32)
+                        fn = lambda xx, p, pol=pol: p.forward(
+                            xx, pol, mesh, activation=None)
                         coll = _collective_bytes(fn, (x, pp), mesh)
                         wall = (_bench_wall(jax.jit(fn), x, pp)
                                 if m == 8 else float("nan"))

@@ -14,7 +14,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
 from repro.configs import get_smoke_config
+from repro.core.policy import ExecutionPolicy
 from repro.models.common import REPLICATED
 from repro.models.registry import build_model
 from repro.quant.gptq import quantize_model
@@ -46,10 +49,10 @@ def run(out_lines: list):
     for _ in range(4):
         eval_batches.append(next(eit))
 
-    def eval_loss(m, params):
+    def eval_loss(m, params, ctx=REPLICATED):
         tot = 0.0
         for b in eval_batches:
-            tot += float(trainstep.loss_fn(m, params, b, REPLICATED))
+            tot += float(trainstep.loss_fn(m, params, b, ctx))
         return tot / len(eval_batches)
 
     dense_loss = eval_loss(model, state["params"])
@@ -59,9 +62,12 @@ def run(out_lines: list):
 
     for scheme in ("naive-actorder", "exllama", "tp-aware"):
         qcfg = cfg.with_quant(mode="mlp", scheme=scheme)
+        # evaluate under the config's own deployment plan
+        qctx = dataclasses.replace(
+            REPLICATED, policy=ExecutionPolicy.from_config(qcfg))
         qparams = quantize_model(qcfg, state["params"],
                                  rng=jax.random.PRNGKey(7))
-        ql = eval_loss(build_model(qcfg), qparams)
+        ql = eval_loss(build_model(qcfg), qparams, qctx)
         line = f"int4-{scheme},{ql:.4f},{ql - dense_loss:+.4f}"
         print(line)
         out_lines.append(line)

@@ -1,6 +1,16 @@
 import os
+import sys
+
 # TP benchmarks need multiple host devices (8, like the paper's 8-GPU node).
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# Fallback for `python benchmarks/run.py` without PYTHONPATH=src (the
+# documented invocation is `python -m benchmarks.run` from the repo root
+# with PYTHONPATH=src): both the repo root (the `benchmarks` package) and
+# src/ (`repro`) must be importable before any repro import below.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 """Benchmark harness: one module per paper table/figure group.
 
@@ -10,9 +20,6 @@ Writes a CSV transcript to results/bench.csv as well as stdout.
 """
 
 import argparse
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:

@@ -2,8 +2,10 @@
 
 Shows the whole story in ~60 lines:
   1. quantize a (gate/up -> down) pair with act_order (GPTQ Eq. 3),
-  2. deploy it under naive-actorder / exllama / tp-aware layouts,
-  3. verify all three compute the same function,
+  2. describe each deployment as one ``ExecutionPolicy`` (scheme, kernel
+     backend, dtypes, TP collective strategy),
+  3. run ``PlannedPair.forward(x, policy, mesh=...)`` — the canonical
+     runtime entry point — and verify all three compute the same function,
   4. count the collectives each one needs under tensor parallelism.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -17,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import reorder, schemes
+from repro.core import reorder
+from repro.core.policy import ExecutionPolicy
 from repro.launch import roofline
 
 K1, N1, N2, M, TP = 512, 1024, 512, 8, 4
@@ -37,10 +40,13 @@ for scheme in ("naive-actorder", "exllama", "tp-aware"):
     # offline: quantize int4 (group 128, act_order) + lay out for `scheme`
     pp = reorder.plan_pair(w_up, w_down, w_gate=w_gate, scheme=scheme,
                            group_size_up=128, group_size_down=128, rng=rng)
+    # the deployment plan as one object: layout scheme + kernel backend
+    # (auto: pallas on TPU for ordered layouts, jnp here) + collective
+    policy = ExecutionPolicy.auto(scheme)
     # online: tensor-parallel forward with explicit collectives
     with mesh:
-        fn = lambda xx, p=pp: schemes.pair_forward_tp(
-            xx, p, mesh, activation="silu")
+        fn = lambda xx, p=pp, pol=policy: p.forward(
+            xx, pol, mesh, activation="silu")
         y = jax.jit(fn)(x)
         hlo = jax.jit(fn).lower(x).compile().as_text()
     outs[scheme] = np.asarray(y)

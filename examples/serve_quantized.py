@@ -18,6 +18,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.policy import ExecutionPolicy
 from repro.models.common import ParallelContext
 from repro.runtime.sampling import SamplingConfig
 from repro.runtime.scheduler import Request, Scheduler
@@ -34,14 +35,17 @@ def main():
 
     cfg = get_smoke_config(args.arch).with_quant(mode="mlp",
                                                  scheme=args.scheme)
+    # the deployment plan, derived once from the config and threaded
+    # through the engine to every quantized GEMM
+    policy = ExecutionPolicy.from_config(cfg)
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    ctx = ParallelContext(mesh=mesh, batch_axes=("data",))
-    print(f"arch={args.arch} scheme={args.scheme} mesh=2x4 "
-          f"(data x model)")
+    ctx = ParallelContext(mesh=mesh, batch_axes=("data",), policy=policy)
+    print(f"arch={args.arch} scheme={args.scheme} backend={policy.backend} "
+          f"mesh=2x4 (data x model)")
 
     with mesh:
         engine = make_engine(cfg, jax.random.PRNGKey(0), ctx=ctx,
-                             max_seq=48)
+                             max_seq=48, policy=policy)
         sched = Scheduler(engine, max_batch=4, prompt_budget=16,
                           scfg=SamplingConfig(temperature=0.7, top_k=40))
         rng = np.random.default_rng(0)

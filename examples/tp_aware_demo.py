@@ -55,16 +55,20 @@ print("rank 0 Y1 shard now produces channels:", np.asarray(p2[:half]),
       " == its W2 shard's rows\n")
 
 # --- numerical proof --------------------------------------------------------
+# One ExecutionPolicy describes the runtime contract (kernel backend,
+# dtypes, collective); PlannedPair.forward(x, policy) is the entry point.
+from repro.core.policy import ExecutionPolicy
+
 for scheme in ("naive-actorder", "exllama", "tp-aware"):
     pp = reorder.plan_pair(w1, w2, scheme=scheme, group_size_up=G,
                            group_size_down=G, rng=rng)
     shards = reorder.shard_pair(pp, TP) if scheme == "tp-aware" else None
-    from repro.core import schemes as sch
+    policy = ExecutionPolicy.auto(scheme)
 
-    y = sch.pair_forward_reference(x, pp)
+    y = pp.forward(x, policy)
     if shards:
         # simulate per-rank compute + final AllReduce by hand
-        y_tp = sum(sch.pair_forward_reference(x, s) for s in shards)
+        y_tp = sum(s.forward(x, policy) for s in shards)
         print(f"{scheme:15s} y[0,:4] = {np.asarray(y)[0, :4].round(3)}   "
               f"(per-rank sum matches: "
               f"{np.allclose(np.asarray(y_tp), np.asarray(y), atol=1e-3)})")

@@ -47,6 +47,14 @@ class QuantConfig:
     # d_ff / tp_groups so an up-to-tp_groups-way model axis always gets
     # whole groups per shard.
     tp_groups: int = 16
+    # Runtime half of the deployment plan, consumed through
+    # ``ExecutionPolicy.from_config`` (core/policy.py): the dequant-GEMM
+    # kernel ("auto" picks pallas on TPU for ordered layouts, else jnp),
+    # the GEMM compute dtype, and the row-TP epilogue collective.
+    backend: str = "auto"        # "auto" | kernels.dispatch registry key
+    compute_dtype: str = "float32"   # "float32" | "bfloat16" | "float16"
+    reduce: str = "psum"         # "psum" | "psum_scatter" (beyond-paper)
+    reduce_dtype: Optional[str] = None  # e.g. "bfloat16" low-bit reduction
 
 
 @dataclasses.dataclass(frozen=True)

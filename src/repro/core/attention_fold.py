@@ -107,19 +107,26 @@ def plan_attention_vo(
 
 def attention_vo_reference(x, q_heads, attn_weights, pp: PlannedPair, *,
                            n_heads: int, n_kv_heads: int, head_dim: int,
-                           compute_dtype=jnp.float32) -> jax.Array:
+                           policy=None, compute_dtype=None) -> jax.Array:
     """Reference forward: X -> V -> attention-mix -> out_proj, folded plan.
 
     ``attn_weights``: (B, H, S, T) softmaxed scores (already computed from
     Q/K — V-channel permutations cannot affect them).  Used by the
     exactness tests; the serving path fuses this into the model's
-    attention.
+    attention.  ``policy``: ``ExecutionPolicy`` selecting kernel/dtypes
+    for the two quantized GEMMs (None = defaults; ``compute_dtype=`` is
+    the deprecated kwarg spelling, one-PR shim).
     """
     from repro.core import schemes
+    from repro.core.policy import _UNSET, resolve_policy
 
+    policy = resolve_policy(
+        policy, where="attention_vo_reference",
+        compute_dtype=compute_dtype if compute_dtype is not None else _UNSET)
+    compute_dtype = policy.compute_dtype
     g = n_heads // n_kv_heads
     xin = jnp.take(x, pp.p1_up, axis=-1) if pp.p1_up is not None else x
-    v = schemes.qmatmul(xin, pp.up, compute_dtype=compute_dtype)
+    v = schemes.qmatmul(xin, pp.up, policy)
     b, t, _ = v.shape
     v = v.reshape(b, t, n_kv_heads, head_dim)
     # out[b, s, h] = sum_t attn[b, h, s, t] * v[b, t, h // g]
@@ -127,4 +134,4 @@ def attention_vo_reference(x, q_heads, attn_weights, pp: PlannedPair, *,
                      attn_weights.astype(compute_dtype),
                      jnp.repeat(v, g, axis=2))
     out = out.reshape(b, -1, n_heads * head_dim)
-    return schemes.qmatmul(out, pp.down, compute_dtype=compute_dtype)
+    return schemes.qmatmul(out, pp.down, policy)

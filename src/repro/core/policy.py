@@ -1,0 +1,189 @@
+"""ExecutionPolicy — the paper's *a-priori deployment plan* as one object.
+
+The paper's contribution is a plan decided before the first token: which
+layout scheme the weights were prepared in (Algorithms 1-3), which kernel
+executes the dequant-GEMM, what dtypes compute/accumulate/reduce in, and
+which collective closes the row-TP layer.  The repo used to thread that
+plan through the stack as loose kwargs (``scheme=``, ``backend=``,
+``reduce=``, ``compute_dtype=``, block sizes) duplicated at every call
+site; this module makes it a single frozen, hashable record that flows
+from config to kernel unchanged.
+
+Construction paths:
+
+* ``ExecutionPolicy.from_config(cfg)`` — the deployment plan recorded in a
+  ``ModelConfig``/``QuantConfig`` (``backend="auto"`` resolves via the
+  heuristic below).
+* ``ExecutionPolicy.auto(scheme)`` — pick the fused Pallas kernel when the
+  layout allows it (ordered layouts on a real TPU), fall back to the
+  XLA-fused ``jnp`` path otherwise.
+* ``ExecutionPolicy()`` — the historical defaults (tp-aware / jnp / f32 /
+  psum), bit-identical to the old kwarg defaults.
+
+Consumption: ``PlannedPair.forward(x, policy, mesh=...)`` is the canonical
+runtime entry point; ``kernels/dispatch.py`` resolves
+``(layout kind, policy.backend)`` to the kernel callable.  See DESIGN.md
+§1 for the architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "KernelTiling", "ExecutionPolicy", "DEFAULT_POLICY", "resolve_policy",
+]
+
+#: Sentinel distinguishing "kwarg not passed" from an explicit None in the
+#: legacy-kwarg deprecation shims (``resolve_policy``).
+_UNSET = object()
+
+_REDUCES = ("psum", "psum_scatter", "none")
+
+
+def _canon_dtype(dt):
+    """Canonicalize a dtype-like to a hashable np.dtype (None passes)."""
+    if dt is None:
+        return None
+    return jax.dtypes.canonicalize_dtype(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTiling:
+    """Tile/lowering knobs for the fused Pallas kernels.
+
+    ``block_k=None`` lets ``dequant_matmul.pick_block_k`` choose the
+    largest group-aligned K tile; ``interpret=None`` auto-selects
+    interpret mode off-TPU (this container) and compiled Mosaic on TPU.
+    """
+
+    block_m: int = 128
+    block_n: int = 128
+    block_k: Optional[int] = None
+    interpret: Optional[bool] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """The entire runtime execution contract for a quantized deployment.
+
+    Frozen + hashable: safe as a jit static argument and inside
+    ``shard_map`` closures.  ``scheme`` records the *offline* layout the
+    weights were planned with (the runtime always trusts the plan pytree's
+    own ``scheme`` field; a policy's copy exists so config-time code can
+    carry the full plan in one object).
+    """
+
+    scheme: str = "tp-aware"
+    backend: str = "jnp"            # key into kernels.dispatch registry
+    compute_dtype: Any = jnp.float32
+    accum_dtype: Any = jnp.float32
+    reduce: str = "psum"            # row-TP epilogue collective
+    reduce_dtype: Optional[Any] = None  # e.g. bf16: low-bit reduction
+    tiling: KernelTiling = KernelTiling()
+
+    def __post_init__(self):
+        from repro.core.reorder import SCHEMES
+        if self.scheme not in SCHEMES:
+            raise ValueError(
+                f"unknown scheme {self.scheme!r}, expected one of {SCHEMES}")
+        if self.reduce not in _REDUCES:
+            raise ValueError(
+                f"unknown reduce {self.reduce!r}, expected one of {_REDUCES}")
+        object.__setattr__(self, "compute_dtype",
+                           _canon_dtype(self.compute_dtype))
+        object.__setattr__(self, "accum_dtype",
+                           _canon_dtype(self.accum_dtype))
+        object.__setattr__(self, "reduce_dtype",
+                           _canon_dtype(self.reduce_dtype))
+
+    # ---- builders ---------------------------------------------------------
+
+    def with_(self, **kw) -> "ExecutionPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def with_tiling(self, **kw) -> "ExecutionPolicy":
+        return dataclasses.replace(
+            self, tiling=dataclasses.replace(self.tiling, **kw))
+
+    @classmethod
+    def auto(cls, scheme: str = "tp-aware", *, on_tpu: Optional[bool] = None,
+             **overrides) -> "ExecutionPolicy":
+        """Heuristic plan: fused Pallas kernel when the layout allows.
+
+        Ordered layouts (exllama / tp-aware) have the group-contiguous
+        metadata the Pallas kernel's locality depends on; on TPU they get
+        ``backend="pallas"``.  The naive g_idx layout and CPU hosts (where
+        the kernel would run interpreted) fall back to ``jnp`` — XLA fuses
+        the dequant into the GEMM epilogue there.
+        """
+        if on_tpu is None:
+            try:
+                on_tpu = jax.default_backend() == "tpu"
+            except Exception:  # pragma: no cover
+                on_tpu = False
+        ordered = scheme != "naive-actorder"
+        backend = "pallas" if (on_tpu and ordered) else "jnp"
+        return cls(scheme=scheme, backend=backend, **overrides)
+
+    @classmethod
+    def from_config(cls, cfg) -> "ExecutionPolicy":
+        """Build the deployment plan recorded in a ``ModelConfig`` (via its
+        ``quant`` field) or a ``QuantConfig`` directly."""
+        qc = getattr(cfg, "quant", cfg)
+        dtypes = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+                  "float16": jnp.float16, None: None}
+
+        def lookup(field, name):
+            try:
+                return dtypes[name]
+            except KeyError:
+                raise ValueError(
+                    f"unknown {field} {name!r}, expected one of "
+                    f"{sorted(k for k in dtypes if k)}") from None
+
+        compute = lookup("compute_dtype", qc.compute_dtype)
+        reduce_dt = lookup("reduce_dtype", qc.reduce_dtype)
+        if qc.backend == "auto":
+            return cls.auto(qc.scheme, compute_dtype=compute,
+                            reduce=qc.reduce, reduce_dtype=reduce_dt)
+        return cls(scheme=qc.scheme, backend=qc.backend,
+                   compute_dtype=compute, reduce=qc.reduce,
+                   reduce_dtype=reduce_dt)
+
+
+DEFAULT_POLICY = ExecutionPolicy()
+
+
+def resolve_policy(policy: Optional[ExecutionPolicy] = None, *,
+                   where: str = "this function",
+                   backend=_UNSET, compute_dtype=_UNSET,
+                   reduce=_UNSET, reduce_dtype=_UNSET) -> ExecutionPolicy:
+    """Deprecation shim: translate legacy loose kwargs into a policy.
+
+    New call sites pass ``policy`` and nothing else.  Old call sites that
+    still pass ``backend=``/``compute_dtype=``/``reduce=``/``reduce_dtype=``
+    keep working for one PR but get a ``DeprecationWarning``; mixing both
+    styles is an error.
+    """
+    legacy = {k: v for k, v in (("backend", backend),
+                                ("compute_dtype", compute_dtype),
+                                ("reduce", reduce),
+                                ("reduce_dtype", reduce_dtype))
+              if v is not _UNSET}
+    if not legacy:
+        return policy if policy is not None else DEFAULT_POLICY
+    if policy is not None:
+        raise TypeError(
+            f"{where}: pass either a policy or legacy kwargs, not both "
+            f"(got policy and {sorted(legacy)})")
+    warnings.warn(
+        f"{where}: keyword deployment arguments {sorted(legacy)} are "
+        f"deprecated; construct an ExecutionPolicy instead "
+        f"(repro.core.policy)", DeprecationWarning, stacklevel=3)
+    return dataclasses.replace(DEFAULT_POLICY, **legacy)

@@ -56,6 +56,27 @@ class PlannedPair:
     p2: Optional[jax.Array]                # (N1,) down-rows perm
     scheme: str = dataclasses.field(metadata=dict(static=True))
 
+    def forward(self, x: jax.Array, policy=None, mesh=None, *,
+                axis: str = "model", batch_axes: tuple = (),
+                activation: Optional[str] = None) -> jax.Array:
+        """Canonical runtime entry point: run the pair under a deployment
+        ``policy`` (``ExecutionPolicy``; None = defaults).
+
+        ``mesh=None`` runs the single-device reference semantics; with a
+        mesh, the paper's explicit-collective shard_map path runs over
+        mesh axis ``axis``.  The *layout* is always ``self.scheme`` (the
+        plan is baked into the weights offline); the policy supplies the
+        kernel backend, dtypes, and reduce strategy.
+        """
+        from repro.core import schemes
+
+        if mesh is None:
+            return schemes.pair_forward_reference(
+                x, self, policy, activation=activation)
+        return schemes.pair_forward_tp(
+            x, self, mesh, policy, axis=axis, batch_axes=batch_axes,
+            activation=activation)
+
     @property
     def k1(self) -> int:
         return self.up.k

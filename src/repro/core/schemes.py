@@ -11,6 +11,13 @@ Three schemes, one arithmetic result (property-tested):
 
 All functions are shape-polymorphic over leading batch dims: ``x`` is
 ``(..., K1)``.
+
+Runtime knobs (kernel backend, compute/reduce dtypes, collective
+strategy, tiling) arrive as one ``ExecutionPolicy`` (``core/policy.py``);
+``PlannedPair.forward(x, policy, mesh=...)`` is the canonical entry
+point.  The old loose kwargs (``backend=``, ``compute_dtype=``,
+``reduce=``, ``reduce_dtype=``) still work for one PR via
+``resolve_policy`` but emit a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
@@ -22,7 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import quantization as qz
+from repro.core import compat
+from repro.core.policy import (_UNSET, ExecutionPolicy, resolve_policy)
 from repro.core.quantization import QuantizedLinear
 from repro.core.reorder import PlannedPair
 
@@ -40,21 +48,24 @@ ACTIVATIONS: dict[str, Callable] = {
 }
 
 
-def qmatmul(x: jax.Array, ql: QuantizedLinear, *, backend: str = "jnp",
-            compute_dtype=jnp.float32) -> jax.Array:
-    """``x @ dequantize(ql)`` via the selected backend.
+def qmatmul(x: jax.Array, ql: QuantizedLinear,
+            policy: Optional[ExecutionPolicy] = None, *,
+            backend=_UNSET, compute_dtype=_UNSET) -> jax.Array:
+    """``x @ dequantize(ql)`` via the policy-selected kernel.
 
-    ``backend="jnp"`` materializes the fp weight (XLA fuses the dequant into
-    the GEMM epilogue on TPU; it is also what the dry-run lowers so
-    cost_analysis sees real FLOPs/bytes).  ``backend="pallas"`` calls the
-    fused Pallas kernel (TPU hot path; interpret=True on CPU).
+    The kernel is resolved from ``(ql.kind, policy.backend)`` by the
+    registry in ``kernels/dispatch.py`` — ``"jnp"`` materializes the fp
+    weight (XLA fuses the dequant into the GEMM epilogue on TPU; also what
+    the dry-run lowers so cost_analysis sees real FLOPs/bytes),
+    ``"pallas"`` is the fused kernel (TPU hot path; interpret=True on
+    CPU), ``"ref"`` the pure-jnp oracle.  ``backend=``/``compute_dtype=``
+    are the deprecated kwarg spelling (one-PR shim).
     """
-    if backend == "pallas":
-        from repro.kernels import ops  # lazy: kernels are optional at import
+    policy = resolve_policy(policy, where="qmatmul", backend=backend,
+                            compute_dtype=compute_dtype)
+    from repro.kernels import dispatch  # lazy: kernels optional at import
 
-        return ops.dequant_matmul(x, ql, compute_dtype=compute_dtype)
-    w = qz.dequantize(ql, dtype=compute_dtype)
-    return jnp.matmul(x.astype(compute_dtype), w)
+    return dispatch.qmatmul(x, ql, policy)
 
 
 # ---------------------------------------------------------------------------
@@ -64,14 +75,17 @@ def qmatmul(x: jax.Array, ql: QuantizedLinear, *, backend: str = "jnp",
 def pair_forward_reference(
     x: jax.Array,
     pp: PlannedPair,
+    policy: Optional[ExecutionPolicy] = None,
     *,
     activation: Optional[str] = None,
-    compute_dtype=jnp.float32,
-    backend: str = "jnp",
+    compute_dtype=_UNSET,
+    backend=_UNSET,
 ) -> jax.Array:
     """Single-device forward of a planned pair; ground truth for TP tests."""
+    policy = resolve_policy(policy, where="pair_forward_reference",
+                            backend=backend, compute_dtype=compute_dtype)
     act = ACTIVATIONS[activation or "identity"]
-    mm = functools.partial(qmatmul, backend=backend, compute_dtype=compute_dtype)
+    mm = functools.partial(qmatmul, policy=policy)
 
     if pp.scheme == "naive-actorder":
         y1 = mm(x, pp.up)
@@ -139,10 +153,7 @@ def _pair_local_forward(
     *,
     axis: str,
     activation: Optional[str],
-    compute_dtype,
-    backend: str,
-    reduce: str,
-    reduce_dtype=None,
+    policy: ExecutionPolicy,
 ) -> jax.Array:
     """Per-rank body executed under shard_map.
 
@@ -151,7 +162,7 @@ def _pair_local_forward(
     shard for down, local P2 chunk for exllama).
     """
     act = ACTIVATIONS[activation or "identity"]
-    mm = functools.partial(qmatmul, backend=backend, compute_dtype=compute_dtype)
+    mm = functools.partial(qmatmul, policy=policy)
 
     if pp.scheme == "naive-actorder":
         # Original-order columns: local Y1 chunk already feeds the matching
@@ -190,35 +201,36 @@ def _pair_local_forward(
     else:
         raise ValueError(f"unknown scheme {pp.scheme!r}")
 
-    if reduce_dtype is not None:
+    if policy.reduce_dtype is not None:
         # beyond-paper: collective in bf16 — halves ICI bytes of the
         # trailing all-reduce; the f32 partial sums are already complete
         # per-rank, so only the cross-rank accumulation is lower-precision.
-        y2 = y2.astype(reduce_dtype)
-    if reduce == "psum":
+        y2 = y2.astype(policy.reduce_dtype)
+    if policy.reduce == "psum":
         return jax.lax.psum(y2, axis)                            # l.6 / l.3
-    if reduce == "psum_scatter":
+    if policy.reduce == "psum_scatter":
         # beyond-paper epilogue: reduce-scatter along the output dim; the
         # caller keeps the output sharded (halves ICI bytes vs all-reduce).
         return jax.lax.psum_scatter(y2, axis, scatter_dimension=y2.ndim - 1,
                                     tiled=True)
-    if reduce == "none":
+    if policy.reduce == "none":
         return y2
-    raise ValueError(f"unknown reduce {reduce!r}")
+    raise ValueError(f"unknown reduce {policy.reduce!r}")
 
 
 def pair_forward_tp(
     x: jax.Array,
     pp: PlannedPair,
     mesh: jax.sharding.Mesh,
+    policy: Optional[ExecutionPolicy] = None,
     *,
     axis: str = "model",
     batch_axes: tuple = (),
     activation: Optional[str] = None,
-    compute_dtype=jnp.float32,
-    backend: str = "jnp",
-    reduce: str = "psum",
-    reduce_dtype=None,
+    compute_dtype=_UNSET,
+    backend=_UNSET,
+    reduce=_UNSET,
+    reduce_dtype=_UNSET,
 ) -> jax.Array:
     """Tensor-parallel forward over mesh axis ``axis``.
 
@@ -227,18 +239,19 @@ def pair_forward_tp(
     canonical TP sharding (see ``pair_pspecs``); under jit, GSPMD moves the
     globally-laid-out arrays into place, or callers pass pre-sharded arrays.
     """
+    policy = resolve_policy(policy, where="pair_forward_tp",
+                            backend=backend, compute_dtype=compute_dtype,
+                            reduce=reduce, reduce_dtype=reduce_dtype)
     bspec = (batch_axes if batch_axes else None,) + (None,) * (x.ndim - 1)
     x_spec = P(*bspec)
-    out_last = axis if reduce == "psum_scatter" else None
+    out_last = axis if policy.reduce == "psum_scatter" else None
     out_spec = P(*((bspec[0],) + (None,) * (x.ndim - 2) + (out_last,)))
 
     fn = functools.partial(
         _pair_local_forward, axis=axis, activation=activation,
-        compute_dtype=compute_dtype, backend=backend, reduce=reduce,
-        reduce_dtype=reduce_dtype)
-    return jax.shard_map(
+        policy=policy)
+    return compat.shard_map(
         fn, mesh=mesh,
         in_specs=(x_spec, pair_pspecs(pp, axis)),
         out_specs=out_spec,
-        check_vma=False,
     )(x, pp)

@@ -36,7 +36,8 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("compute_dtype", "block_m",
-                                             "block_n", "interpret"))
+                                             "block_n", "block_k",
+                                             "interpret"))
 def dequant_matmul(
     x: jax.Array,
     ql: QuantizedLinear,
@@ -44,6 +45,7 @@ def dequant_matmul(
     compute_dtype=jnp.float32,
     block_m: int = 128,
     block_n: int = 128,
+    block_k: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """``x @ dequantize(ql)`` with the fused Pallas kernel.
@@ -70,17 +72,44 @@ def dequant_matmul(
         scales = _pad_to(scales, bn, 1)
         zeros = _pad_to(zeros, bn, 1)
 
+    bk_kw = {} if block_k is None else {"block_k": block_k}
     if ql.kind == "ordered":
         y = dk.dequant_matmul_ordered(
             x2, qweight, scales, zeros, group_size=ql.group_size,
             block_m=bm, block_n=bn, compute_dtype=compute_dtype,
-            interpret=interpret)
+            interpret=interpret, **bk_kw)
     else:
         y = dk.dequant_matmul_gidx(
             x2, qweight, scales, zeros, ql.g_idx,
             block_m=bm, block_n=bn, compute_dtype=compute_dtype,
-            interpret=interpret)
+            interpret=interpret, **bk_kw)
     return y[:m, :n].reshape(*lead, n)
+
+
+def pallas_dequant_matmul_ordered(x, ql, *, compute_dtype=jnp.float32,
+                                  block_m: int = 128, block_n: int = 128,
+                                  block_k: int | None = None,
+                                  interpret: bool | None = None):
+    """Algorithm-1 (ordered-groups) fused kernel; dispatch-registry entry
+    for ``("ordered", "pallas")`` — see ``kernels/dispatch.py``."""
+    if ql.kind != "ordered":
+        raise ValueError(f"ordered kernel got layout kind {ql.kind!r}")
+    return dequant_matmul(x, ql, compute_dtype=compute_dtype,
+                          block_m=block_m, block_n=block_n,
+                          block_k=block_k, interpret=interpret)
+
+
+def pallas_dequant_matmul_gidx(x, ql, *, compute_dtype=jnp.float32,
+                               block_m: int = 128, block_n: int = 128,
+                               block_k: int | None = None,
+                               interpret: bool | None = None):
+    """Naive g_idx-gather fused kernel; dispatch-registry entry for
+    ``("naive", "pallas")``."""
+    if ql.kind != "naive":
+        raise ValueError(f"g_idx kernel got layout kind {ql.kind!r}")
+    return dequant_matmul(x, ql, compute_dtype=compute_dtype,
+                          block_m=block_m, block_n=block_n,
+                          block_k=block_k, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))

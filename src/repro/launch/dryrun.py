@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.core.policy import ExecutionPolicy
 from repro.launch import mesh as mesh_lib, roofline
 from repro.models.common import ParallelContext
 from repro.models.registry import Model, build_model
@@ -102,8 +103,12 @@ def lower_prefill(model: Model, mesh, shape, scheme: str,
         attn_tp_pad=_tp_size(mesh))
     model = build_model(cfg)
     baxes = mesh_lib.batch_axes_for(mesh, shape.global_batch)
+    # backend pinned to jnp: cost_analysis must see the dequant+GEMM FLOPs,
+    # which the XLA path exposes and an opaque pallas_call would hide
+    policy = ExecutionPolicy.from_config(cfg).with_(backend="jnp")
     ctx = ParallelContext(mesh=mesh, batch_axes=baxes, remat=True,
-                          chunk_scan=chunk_scan, **(ctx_overrides or {}))
+                          chunk_scan=chunk_scan,
+                          **{"policy": policy, **(ctx_overrides or {})})
 
     pstructs = param_structs(model, bf16=True)
     batch_structs = model.batch_shape_structs(shape.global_batch,
@@ -130,8 +135,9 @@ def lower_decode(model: Model, mesh, shape, scheme: str,
     model = build_model(cfg)
     window = model.decode_window(shape.seq_len)   # raises for whisper@500k
     baxes = mesh_lib.batch_axes_for(mesh, shape.global_batch)
+    policy = ExecutionPolicy.from_config(cfg).with_(backend="jnp")
     ctx = ParallelContext(mesh=mesh, batch_axes=baxes,
-                          chunk_scan=chunk_scan)
+                          chunk_scan=chunk_scan, policy=policy)
 
     pstructs = param_structs(model, bf16=True)
     cache_structs = jax.eval_shape(

@@ -13,6 +13,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.policy import ExecutionPolicy
 from repro.launch import mesh as mesh_lib
 from repro.models.common import ParallelContext, REPLICATED
 from repro.runtime.sampling import SamplingConfig
@@ -26,6 +27,14 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--scheme", default="tp-aware",
                     choices=["naive-actorder", "exllama", "tp-aware"])
+    ap.add_argument("--backend", default="auto",
+                    help="dequant-GEMM kernel (auto | any backend "
+                         "registered in kernels.dispatch)")
+    ap.add_argument("--reduce", default="psum",
+                    choices=["psum", "psum_scatter"])
+    ap.add_argument("--reduce-dtype", default=None,
+                    choices=[None, "bfloat16", "float16"],
+                    help="low-bit trailing collective (beyond-paper)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-budget", type=int, default=32)
@@ -37,17 +46,23 @@ def main(argv=None):
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
-    cfg = cfg.with_quant(mode="mlp", scheme=args.scheme)
+    # the whole deployment plan lives on the config; the policy below is
+    # derived from it and flows unchanged to the kernels
+    cfg = cfg.with_quant(mode="mlp", scheme=args.scheme,
+                         backend=args.backend, reduce=args.reduce,
+                         reduce_dtype=args.reduce_dtype)
+    policy = ExecutionPolicy.from_config(cfg)
 
     if args.tp > 1:
         mesh = mesh_lib.make_host_mesh(model=args.tp)
-        ctx = ParallelContext(mesh=mesh, batch_axes=("data",))
+        ctx = ParallelContext(mesh=mesh, batch_axes=("data",),
+                              policy=policy)
     else:
         ctx = REPLICATED
 
     max_seq = args.prompt_budget + args.max_new + 1
     engine = make_engine(cfg, jax.random.PRNGKey(args.seed), ctx=ctx,
-                         max_seq=max_seq)
+                         max_seq=max_seq, policy=policy)
     sched = Scheduler(engine, max_batch=args.max_batch,
                       prompt_budget=args.prompt_budget,
                       scfg=SamplingConfig(temperature=args.temperature,
@@ -68,7 +83,8 @@ def main(argv=None):
     for rid, r in sorted(done.items()):
         print(f"req {rid}: prompt {len(r.prompt):3d} -> {r.output[:8]}...")
     print(f"\n{len(done)} requests, {total_new} tokens in {dt:.1f}s "
-          f"({total_new / dt:.1f} tok/s) [scheme={args.scheme}]")
+          f"({total_new / dt:.1f} tok/s) [scheme={args.scheme} "
+          f"backend={policy.backend} reduce={policy.reduce}]")
 
 
 if __name__ == "__main__":

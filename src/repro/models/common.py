@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core import reorder, schemes
+from repro.core import compat, reorder, schemes
+from repro.core.policy import DEFAULT_POLICY, ExecutionPolicy
 from repro.core.reorder import PlannedPair
 
 
@@ -33,8 +34,13 @@ class ParallelContext:
     batch_axes: tuple = ("data",)
     shard_map_mlp: bool = True     # paper's explicit-collective MLP path
     remat: bool = False
-    mlp_reduce: str = "psum"       # "psum" | "psum_scatter" (beyond-paper)
-    mlp_reduce_dtype: object = None  # e.g. jnp.bfloat16 (beyond-paper)
+    # The deployment plan the quantized MLP pairs execute under (kernel
+    # backend, compute/reduce dtypes, collective strategy).  None falls
+    # back to the legacy mlp_reduce/mlp_reduce_dtype fields below, which
+    # are kept for one PR — prefer ``policy=ExecutionPolicy(...)``.
+    policy: Optional[ExecutionPolicy] = None
+    mlp_reduce: str = "psum"       # DEPRECATED: use policy.reduce
+    mlp_reduce_dtype: object = None  # DEPRECATED: use policy.reduce_dtype
     # Long-seq attention Q-chunking: lax.scan over chunks (True, memory-
     # bounded — the deployment default) or a python-unrolled loop (False —
     # used by the dry-run cost probes, because XLA's cost_analysis counts a
@@ -44,6 +50,25 @@ class ParallelContext:
     # cost_analysis sees the FLOPs) or "flash" (fused Pallas kernel —
     # the TPU deployment path; interpret=True on CPU)
     attn_backend: str = "xla"
+
+    @property
+    def execution_policy(self) -> ExecutionPolicy:
+        """The effective deployment plan: ``policy`` when set, else the
+        legacy per-field spelling translated (bit-identical defaults).
+        Mixing both spellings is ambiguous and errors."""
+        legacy_set = (self.mlp_reduce != "psum"
+                      or self.mlp_reduce_dtype is not None)
+        if self.policy is not None:
+            if legacy_set:
+                raise ValueError(
+                    "ParallelContext got both policy= and legacy "
+                    "mlp_reduce/mlp_reduce_dtype fields; set the reduce "
+                    "strategy on the ExecutionPolicy")
+            return self.policy
+        if not legacy_set:
+            return DEFAULT_POLICY
+        return DEFAULT_POLICY.with_(reduce=self.mlp_reduce,
+                                    reduce_dtype=self.mlp_reduce_dtype)
 
     def shard(self, x: jax.Array, *spec) -> jax.Array:
         if self.mesh is None:
@@ -293,11 +318,10 @@ def _flash_sdpa(cfg: ModelConfig, ctx: ParallelContext, q, k, v, *,
         out = local(qt, kt, vt)
     else:
         spec = P(ctx.batch_spec, ctx.model_axis, None, None)
-        out = jax.shard_map(
+        out = compat.shard_map(
             local, mesh=ctx.mesh,
             in_specs=(spec, spec, spec),
             out_specs=spec,
-            check_vma=False,
         )(qt, kt, vt)
     return out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
 
@@ -504,15 +528,12 @@ def mlp_forward(cfg: ModelConfig, p, x, ctx: ParallelContext, *,
     if isinstance(p, PlannedPair):
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
+        pol = ctx.execution_policy
         if ctx.mesh is not None and ctx.shard_map_mlp:
-            y = schemes.pair_forward_tp(
-                x2, p, ctx.mesh, axis=ctx.model_axis,
-                batch_axes=ctx.batch_axes, activation=act,
-                compute_dtype=jnp.float32, reduce=ctx.mlp_reduce,
-                reduce_dtype=ctx.mlp_reduce_dtype)
+            y = p.forward(x2, pol, ctx.mesh, axis=ctx.model_axis,
+                          batch_axes=ctx.batch_axes, activation=act)
         else:
-            y = schemes.pair_forward_reference(
-                x2, p, activation=act, compute_dtype=jnp.float32)
+            y = p.forward(x2, pol, activation=act)
         return y.reshape(*lead, -1).astype(x.dtype)
     a = schemes.ACTIVATIONS[act]
     h = x @ p["w_up"]

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import schemes
+from repro.core import compat, schemes
+from repro.core.policy import ExecutionPolicy
 
 from repro.configs.base import ModelConfig
 from repro.models import common as cm
@@ -98,16 +99,23 @@ def _dispatch_local(cfg: ModelConfig, xt: jax.Array, router: jax.Array,
     return buf, combine, (probs, idx)
 
 
-def _expert_ffn_local(cfg: ModelConfig, experts, xs, tp_axis: str):
+def _expert_ffn_local(cfg: ModelConfig, experts, xs, tp_axis: str,
+                      policy: ExecutionPolicy):
     """Per-rank expert FFN: ``xs (E_l, C, d)`` through this rank's expert
     shards (inner dims tp-sharded over ``tp_axis``); psum over tp."""
     from repro.core.reorder import PlannedPair
 
     if isinstance(experts, PlannedPair):
+        # within-expert TP always closes with a full-precision psum (the
+        # EP combine needs every rank's complete expert output, and the
+        # low-bit reduce_dtype knob targets the dense-MLP trailing
+        # collective, not this inner reduction); the vmapped per-expert
+        # GEMMs stay on the jnp kernel — Pallas under vmap-of-shard_map
+        # is not a supported lowering.
+        pol = policy.with_(reduce="psum", reduce_dtype=None, backend="jnp")
         fn = functools.partial(
             schemes._pair_local_forward, axis=tp_axis,
-            activation=cfg.activation, compute_dtype=jnp.float32,
-            backend="jnp", reduce="psum")
+            activation=cfg.activation, policy=pol)
         return jax.vmap(fn)(xs, experts).astype(xs.dtype)
 
     act = schemes.ACTIVATIONS[cfg.activation]
@@ -150,6 +158,8 @@ def moe_forward_ep(cfg: ModelConfig, p, x, ctx: ParallelContext):
     t_local = (b // dsize if batch_sharded else b) * s
     cap = _capacity(cfg, t_local)
 
+    pol = ctx.execution_policy
+
     def body(x_l, router, experts_l):
         bl, sl, _ = x_l.shape
         xt = x_l.reshape(bl * sl, d)
@@ -157,17 +167,16 @@ def moe_forward_ep(cfg: ModelConfig, p, x, ctx: ParallelContext):
         # (E, cap, d) -> (E/D, D*cap, d): tokens travel to expert owners
         buf = jax.lax.all_to_all(buf, dp, split_axis=0, concat_axis=1,
                                  tiled=True)
-        out = _expert_ffn_local(cfg, experts_l, buf, tp)
+        out = _expert_ffn_local(cfg, experts_l, buf, tp, pol)
         # (E/D, D*cap, d) -> (E, cap, d): results travel home
         out = jax.lax.all_to_all(out, dp, split_axis=1, concat_axis=0,
                                  tiled=True)
         return combine(out).reshape(bl, sl, d)
 
-    y = jax.shard_map(
+    y = compat.shard_map(
         body, mesh=mesh,
         in_specs=in_specs,
         out_specs=x_spec,
-        check_vma=False,
     )(x, p["router"], p["experts"])
 
     if cfg.dense_residual:

@@ -19,6 +19,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.policy import ExecutionPolicy
 from repro.models.common import ParallelContext, REPLICATED
 from repro.models.registry import Model, build_model
 from repro.runtime import sampling
@@ -31,10 +32,25 @@ class Engine:
     ctx: ParallelContext = REPLICATED
     max_seq: int = 2048
     window: Optional[int] = None
+    # The deployment plan every quantized GEMM in this engine executes
+    # under.  None derives it from the model config; the resolved policy
+    # is injected into ``ctx`` so model code sees one source of truth.
+    policy: Optional[ExecutionPolicy] = None
 
     def __post_init__(self):
         cfg = self.model.cfg
         mod = self.model
+
+        if self.policy is None:
+            self.policy = (self.ctx.policy if self.ctx.policy is not None
+                           else ExecutionPolicy.from_config(cfg))
+        if self.ctx.policy is None:
+            self.ctx = dataclasses.replace(self.ctx, policy=self.policy)
+        elif self.ctx.policy != self.policy:
+            raise ValueError(
+                "Engine got conflicting deployment plans: "
+                f"policy={self.policy} but ctx.policy={self.ctx.policy}; "
+                "pass one (the ctx policy is what model code executes)")
 
         def prefill_logits(params, batch):
             return mod.forward(params, batch, self.ctx, window=self.window)
@@ -125,8 +141,9 @@ class Engine:
 
 
 def make_engine(cfg, rng=None, *, ctx: ParallelContext = REPLICATED,
-                max_seq: int = 2048, window=None) -> Engine:
+                max_seq: int = 2048, window=None,
+                policy: Optional[ExecutionPolicy] = None) -> Engine:
     model = build_model(cfg)
     params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
     return Engine(model=model, params=params, ctx=ctx, max_seq=max_seq,
-                  window=window)
+                  window=window, policy=policy)

@@ -73,8 +73,9 @@ def test_ops_wrapper_dtypes_and_padding(dtype):
 
 
 def test_kernel_matches_scheme_forward():
-    """backend='pallas' pair forward == backend='jnp'."""
-    from repro.core import reorder, schemes
+    """backend='pallas' pair forward == backend='jnp' (policy-selected)."""
+    from repro.core import reorder
+    from repro.core.policy import ExecutionPolicy
 
     rng = jax.random.PRNGKey(12)
     r = jax.random.split(rng, 3)
@@ -83,10 +84,9 @@ def test_kernel_matches_scheme_forward():
         jax.random.normal(r[1], (256, 128)),
         scheme="tp-aware", group_size_up=32, group_size_down=32, rng=rng)
     x = jax.random.normal(r[2], (8, 128))
-    y_jnp = schemes.pair_forward_reference(x, pp, activation="silu",
-                                           backend="jnp")
-    y_pal = schemes.pair_forward_reference(x, pp, activation="silu",
-                                           backend="pallas")
+    y_jnp = pp.forward(x, ExecutionPolicy(backend="jnp"), activation="silu")
+    y_pal = pp.forward(x, ExecutionPolicy(backend="pallas"),
+                       activation="silu")
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp),
                                rtol=1e-4, atol=1e-3)
 

@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import quantization as qz
 
@@ -15,15 +14,6 @@ def test_pack_unpack_roundtrip():
     packed = qz.pack_int4(jnp.asarray(q))
     assert packed.shape == (8, 24) and packed.dtype == jnp.uint32
     out = qz.unpack_int4(packed)
-    np.testing.assert_array_equal(np.asarray(out), q)
-
-
-@given(k8=st.integers(1, 8), n=st.integers(1, 17))
-@settings(max_examples=20, deadline=None)
-def test_pack_unpack_property(k8, n):
-    rng = np.random.default_rng(k8 * 100 + n)
-    q = rng.integers(0, 16, size=(k8 * 8, n)).astype(np.int32)
-    out = qz.unpack_int4(qz.pack_int4(jnp.asarray(q)))
     np.testing.assert_array_equal(np.asarray(out), q)
 
 
@@ -137,23 +127,3 @@ def test_permute_columns_commutes():
     perm_then_dq = qz.dequantize(qz.permute_columns(res.ordered, p))
     np.testing.assert_array_equal(np.asarray(dq_then_perm),
                                   np.asarray(perm_then_dq))
-
-
-@given(
-    kg=st.integers(2, 6), n=st.integers(4, 24), gs_pow=st.integers(3, 5),
-    act=st.booleans(),
-)
-@settings(max_examples=15, deadline=None)
-def test_quantize_roundtrip_property(kg, n, gs_pow, act):
-    gs = 2 ** gs_pow
-    k = kg * gs
-    rng = jax.random.PRNGKey(kg * 1000 + n * 10 + gs_pow)
-    w = jax.random.normal(rng, (k, n)) * 3.0
-    res = qz.quantize(w, gs, act_order=act, rng=rng)
-    # both layouts agree and error is bounded by the per-group scale
-    dq = qz.dequantize(res.naive)
-    g_idx = np.asarray(res.g_idx)
-    bound = np.take(np.asarray(res.naive.scales), g_idx, axis=0) * 0.5 + 1e-5
-    assert (np.abs(np.asarray(w - dq)) <= bound).all()
-    restored = jnp.zeros_like(dq).at[res.perm].set(qz.dequantize(res.ordered))
-    np.testing.assert_array_equal(np.asarray(dq), np.asarray(restored))

@@ -1,0 +1,44 @@
+"""Hypothesis property tests for the quantization substrate.
+
+Kept apart from ``test_quantization.py`` so the deterministic suite runs
+without the optional ``hypothesis`` dependency.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as qz
+
+
+@given(k8=st.integers(1, 8), n=st.integers(1, 17))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_property(k8, n):
+    rng = np.random.default_rng(k8 * 100 + n)
+    q = rng.integers(0, 16, size=(k8 * 8, n)).astype(np.int32)
+    out = qz.unpack_int4(qz.pack_int4(jnp.asarray(q)))
+    np.testing.assert_array_equal(np.asarray(out), q)
+
+
+@given(
+    kg=st.integers(2, 6), n=st.integers(4, 24), gs_pow=st.integers(3, 5),
+    act=st.booleans(),
+)
+@settings(max_examples=15, deadline=None)
+def test_quantize_roundtrip_property(kg, n, gs_pow, act):
+    gs = 2 ** gs_pow
+    k = kg * gs
+    rng = jax.random.PRNGKey(kg * 1000 + n * 10 + gs_pow)
+    w = jax.random.normal(rng, (k, n)) * 3.0
+    res = qz.quantize(w, gs, act_order=act, rng=rng)
+    # both layouts agree and error is bounded by the per-group scale
+    dq = qz.dequantize(res.naive)
+    g_idx = np.asarray(res.g_idx)
+    bound = np.take(np.asarray(res.naive.scales), g_idx, axis=0) * 0.5 + 1e-5
+    assert (np.abs(np.asarray(w - dq)) <= bound).all()
+    restored = jnp.zeros_like(dq).at[res.perm].set(qz.dequantize(res.ordered))
+    np.testing.assert_array_equal(np.asarray(dq), np.asarray(restored))

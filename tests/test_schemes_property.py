@@ -1,0 +1,56 @@
+"""Hypothesis property tests for the deployment schemes.
+
+Kept apart from ``test_schemes.py`` so the deterministic suite runs
+without the optional ``hypothesis`` dependency (``requirements-dev.txt``
+installs it; ``pytest.importorskip`` skips this module when absent).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import reorder, schemes
+from repro.core.policy import DEFAULT_POLICY
+
+from test_schemes import _mk_pair
+
+
+@given(
+    k1g=st.integers(2, 4), n1g=st.integers(2, 6), n2=st.integers(8, 64),
+    gsp=st.integers(4, 6), scheme=st.sampled_from(reorder.SCHEMES),
+    gate=st.booleans(),
+)
+@settings(max_examples=12, deadline=None)
+def test_scheme_equivalence_property(k1g, n1g, n2, gsp, scheme, gate):
+    gs = 2 ** gsp
+    k1, n1 = k1g * gs, n1g * gs
+    pp, x, _ = _mk_pair(k1g * 7 + n1g, k1, n1, n2, gs, scheme, gate)
+    ppn, xn, _ = _mk_pair(k1g * 7 + n1g, k1, n1, n2, gs, "naive-actorder",
+                          gate)
+    y = np.asarray(schemes.pair_forward_reference(x, pp, activation="silu"))
+    yn = np.asarray(schemes.pair_forward_reference(xn, ppn,
+                                                   activation="silu"))
+    scale = max(np.abs(yn).max(), 1.0)
+    np.testing.assert_allclose(y, yn, atol=3e-4 * scale)
+
+
+@given(
+    k1g=st.integers(2, 4), n1g=st.integers(2, 4), n2=st.integers(8, 48),
+    gsp=st.integers(4, 5), scheme=st.sampled_from(reorder.SCHEMES),
+    gate=st.booleans(), act=st.sampled_from(["silu", "gelu", None]),
+)
+@settings(max_examples=12, deadline=None)
+def test_forward_default_policy_matches_legacy_property(
+        k1g, n1g, n2, gsp, scheme, gate, act):
+    """``PlannedPair.forward`` under the default policy is bit-exactly the
+    legacy kwarg path, for any shape/scheme/activation draw."""
+    gs = 2 ** gsp
+    k1, n1 = k1g * gs, n1g * gs
+    pp, x, _ = _mk_pair(k1g * 11 + n1g, k1, n1, n2, gs, scheme, gate)
+    y_new = np.asarray(pp.forward(x, DEFAULT_POLICY, activation=act))
+    with pytest.warns(DeprecationWarning):
+        y_legacy = np.asarray(schemes.pair_forward_reference(
+            x, pp, activation=act, backend="jnp"))
+    np.testing.assert_array_equal(y_new, y_legacy)

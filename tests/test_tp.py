@@ -27,7 +27,8 @@ def _run(script: str):
 def test_tp_schemes_match_reference():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core import reorder, schemes
+        from repro.core import reorder
+        from repro.core.policy import ExecutionPolicy
 
         rng = jax.random.PRNGKey(0)
         k1, n1, n2, m = 128, 256, 128, 16
@@ -43,13 +44,13 @@ def test_tp_schemes_match_reference():
                 pp = reorder.plan_pair(
                     w_up, w_down, w_gate=w_gate, scheme=scheme,
                     group_size_up=32, group_size_down=32, rng=rng)
-                ref = np.asarray(schemes.pair_forward_reference(
-                    x, pp, activation="silu"))
+                ref = np.asarray(pp.forward(x, activation="silu"))
                 with mesh:
                     for reduce in ("psum", "psum_scatter"):
-                        y = np.asarray(schemes.pair_forward_tp(
-                            x, pp, mesh, activation="silu",
-                            batch_axes=("data",), reduce=reduce))
+                        pol = ExecutionPolicy(scheme=scheme, reduce=reduce)
+                        y = np.asarray(pp.forward(
+                            x, pol, mesh, batch_axes=("data",),
+                            activation="silu"))
                         err = np.abs(y - ref).max() / np.abs(ref).max()
                         assert err < 1e-4, (tp, scheme, reduce, err)
                         print("OK", tp, scheme, reduce)
