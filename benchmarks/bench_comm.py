@@ -1,33 +1,40 @@
-"""Collective-bytes accounting per scheme × TP degree (the paper's Figure
-5-8 mechanism, measured exactly from lowered HLO rather than wall time).
+"""Collective-bytes accounting (the paper's Figure 5-8 mechanism, measured
+exactly from lowered HLO rather than wall time) — two tables:
 
-The paper's claim: the Naive Algorithm's AllGather cost grows with rank
-count while TP-Aware pays only the (unavoidable) trailing AllReduce —
-hence speedup grows with TP.  Here the two schemes' per-device ICI bytes
-are parsed from the compiled shard_map program; their ratio is the
-communication-side speedup upper bound.
+1. **per scheme × TP degree**: the paper's claim — the Naive Algorithm's
+   AllGather cost grows with rank count while TP-Aware pays only the
+   (unavoidable) trailing AllReduce, so their ratio is the comm-side
+   speedup upper bound.
+
+2. **per collective strategy × TP degree** (comm/dispatch registry): what
+   the trailing collective itself costs under each registered
+   ``CollectiveSpec`` — measured HLO bytes, the strategy's analytic
+   ``bytes_on_wire`` model, the ratio vs the f32 ``psum`` baseline, and
+   the output's relative error vs the single-device reference.  This is
+   the communication-compression table: ``quant-int8`` lands at
+   ~(1 + 2/block)/4 ≈ 25% of the f32 psum bytes.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.comm import CollectiveSpec, dispatch as comm_dispatch
 from repro.configs import PAPER_PROBLEMS
-from repro.core import reorder
 from repro.core.policy import ExecutionPolicy
 from repro.launch import roofline
 
 from benchmarks.bench_mlp import _mesh, _plan, _collective_bytes
 
 
-def run(out_lines: list):
+def _scheme_table(out_lines: list, m: int):
     print("# bench_comm: per-device ICI bytes by scheme (M=8)")
     header = ("problem,TP,scheme,allgather_B,allreduce_B,total_B,"
               "vs_tpaware")
     print(header)
     out_lines.append(header)
-    m = 8
     for pname, (k1, n1, n2) in PAPER_PROBLEMS.items():
         plans = {s: _plan(k1, n1, n2, s)
                  for s in ("naive-actorder", "exllama", "tp-aware")}
@@ -53,6 +60,62 @@ def run(out_lines: list):
                         f"{coll['total_per_device'] / max(base, 1):.2f}")
                 print(line)
                 out_lines.append(line)
+
+
+def _strategy_table(out_lines: list, m: int):
+    """Trailing-collective cost/error per registered strategy (tp-aware
+    layout, so the epilogue is the ONLY collective in the program).
+
+    ``hlo_B`` is parsed from the compiled program, ``model_B`` is the
+    strategy's analytic ``bytes_on_wire``.  They agree for psum /
+    psum_scatter / quant-int8; for ``cast`` the CPU backend promotes the
+    bf16 all-reduce to f32 (measured = 2x model) — on TPU the wire stays
+    bf16, which is what the model column accounts."""
+    print("# bench_comm: trailing collective by strategy (M=8, tp-aware)")
+    header = ("problem,TP,collective,hlo_B,model_B,vs_psum,rel_err")
+    print(header)
+    out_lines.append(header)
+    for pname, (k1, n1, n2) in PAPER_PROBLEMS.items():
+        pp = _plan(k1, n1, n2, "tp-aware")
+        x = jax.random.normal(jax.random.PRNGKey(1), (m, k1))
+        ref = None
+        for tp in (2, 4, 8):
+            if tp > len(jax.devices()):
+                continue
+            mesh = _mesh(tp)
+            psum_model = CollectiveSpec(name="psum").bytes_on_wire(
+                (m, n2), tp)
+            for name in comm_dispatch.strategies():
+                spec = CollectiveSpec.parse(name)
+                pol = ExecutionPolicy(scheme="tp-aware", backend="jnp",
+                                      compute_dtype=jnp.float32,
+                                      collective=spec)
+                with mesh:
+                    fn = lambda xx, p, pol=pol: p.forward(
+                        xx, pol, mesh, activation=None)
+                    coll = _collective_bytes(fn, (x, pp), mesh)
+                    if name == "none":
+                        err = float("nan")   # partial sums by design
+                    else:
+                        y = np.asarray(jax.jit(fn)(x, pp), dtype=np.float32)
+                        if ref is None:
+                            ref = np.asarray(
+                                pp.forward(x, activation=None),
+                                dtype=np.float32)
+                        err = (np.abs(y - ref).max()
+                               / max(np.abs(ref).max(), 1e-9))
+                model = spec.bytes_on_wire((m, n2), tp)
+                line = (f"{pname},{tp},{name},"
+                        f"{coll['total_per_device']:.0f},{model:.0f},"
+                        f"{model / max(psum_model, 1):.3f},{err:.1e}")
+                print(line)
+                out_lines.append(line)
+
+
+def run(out_lines: list):
+    m = 8
+    _scheme_table(out_lines, m)
+    _strategy_table(out_lines, m)
 
 
 if __name__ == "__main__":

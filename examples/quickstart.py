@@ -1,12 +1,14 @@
 """Quickstart: the paper's three deployment schemes on one MLP pair.
 
-Shows the whole story in ~60 lines:
+Shows the whole story in ~80 lines:
   1. quantize a (gate/up -> down) pair with act_order (GPTQ Eq. 3),
   2. describe each deployment as one ``ExecutionPolicy`` (scheme, kernel
-     backend, dtypes, TP collective strategy),
+     backend, dtypes, TP collective spec),
   3. run ``PlannedPair.forward(x, policy, mesh=...)`` — the canonical
      runtime entry point — and verify all three compute the same function,
-  4. count the collectives each one needs under tensor parallelism.
+  4. count the collectives each one needs under tensor parallelism,
+  5. swap the trailing collective for a *quantized* one
+     (``collective="quant-int8"``) and compare wire bytes and error.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -60,3 +62,23 @@ print("\nmax |tp-aware - naive| =",
       "(same arithmetic, different layout/communication)")
 print("max |exllama  - naive| =",
       np.abs(outs["exllama"] - outs["naive-actorder"]).max())
+
+# --- communication compression: a quantized trailing collective -----------
+# The collective is a CollectiveSpec on the policy, dispatched by the
+# comm/dispatch registry — swapping the f32 AllReduce for a blockwise-int8
+# one is a one-field change, no model code involved.
+from repro.comm import CollectiveSpec
+
+pp = reorder.plan_pair(w_up, w_down, w_gate=w_gate, scheme="tp-aware",
+                       group_size_up=128, group_size_down=128, rng=rng)
+print(f"\ntrailing collective on the ({M}, {N2}) partials at TP={TP}:")
+for shorthand in ("psum", "cast:bfloat16", "quant-int8"):
+    spec = CollectiveSpec.parse(shorthand)
+    policy = ExecutionPolicy.auto("tp-aware", collective=spec)
+    with mesh:
+        y = np.asarray(jax.jit(
+            lambda xx: pp.forward(xx, policy, mesh, activation="silu"))(x))
+    err = np.abs(y - outs["tp-aware"]).max() / np.abs(outs["tp-aware"]).max()
+    print(f"  {shorthand:14s} "
+          f"{roofline.fmt_bytes(spec.bytes_on_wire((M, N2), TP)):>8s}/device"
+          f"  rel_err={err:.1e}")

@@ -29,18 +29,24 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
     ap.add_argument("--scheme", default="tp-aware")
+    ap.add_argument("--collective", default="psum",
+                    help="trailing collective spec (comm.dispatch registry "
+                         "shorthand, e.g. psum, psum_scatter, "
+                         "cast:bfloat16, quant-int8)")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-new", type=int, default=12)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).with_quant(mode="mlp",
-                                                 scheme=args.scheme)
+                                                 scheme=args.scheme,
+                                                 collective=args.collective)
     # the deployment plan, derived once from the config and threaded
     # through the engine to every quantized GEMM
     policy = ExecutionPolicy.from_config(cfg)
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     ctx = ParallelContext(mesh=mesh, batch_axes=("data",), policy=policy)
     print(f"arch={args.arch} scheme={args.scheme} backend={policy.backend} "
+          f"collective={policy.collective.shorthand()} "
           f"mesh=2x4 (data x model)")
 
     with mesh:

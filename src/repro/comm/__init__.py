@@ -1,0 +1,7 @@
+"""TP epilogue collectives: spec (``CollectiveSpec``) + strategy registry
+(``comm/dispatch.py``).  See DESIGN.md §1 for the architecture."""
+
+from repro.comm.spec import CollectiveSpec
+from repro.comm import dispatch
+
+__all__ = ["CollectiveSpec", "dispatch"]

@@ -1,0 +1,250 @@
+"""Collective dispatch: ``CollectiveSpec.name`` -> TP epilogue strategy.
+
+Mirror of ``kernels/dispatch.py`` for the *communication* half of the
+deployment plan: this registry is the ONLY place in the repo that maps
+collective names to implementations.  ``schemes._pair_local_forward``
+(and therefore every TP scheme forward, model MLP, and serving path)
+closes its row-TP layer here from the ``ExecutionPolicy.collective``
+spec; new strategies register themselves with the ``@register`` decorator
+and immediately become valid spec names — no stringly-typed branching at
+the call sites.
+
+Strategy contract (``y_partial`` is one rank's full-size partial sum of
+the row-TP output, executing inside ``shard_map`` over mesh axis
+``axis``):
+
+* ``apply(y_partial, axis, spec, policy) -> y`` — run the collective,
+* ``bytes_on_wire(shape, tp, spec) -> float`` — analytic per-device ICI
+  bytes under the same ring cost model as ``launch/roofline.py``, so
+  ``bench_comm`` accounts each strategy without compiling it,
+* ``scatters_output`` — True when the result stays sharded along its
+  last dim (the caller's out_specs must match).
+
+Seed strategies (see DESIGN.md §1):
+
+* ``psum``         — f32 all-reduce; bit-exact with the historical path.
+* ``psum_scatter`` — reduce-scatter; output sharded, half the ICI bytes.
+* ``cast``         — all-reduce in a low-bit wire dtype (default bf16);
+  absorbs the old ad-hoc ``reduce_dtype`` cast.
+* ``quant-int8``   — blockwise symmetric int8 quantized all-reduce
+  (quantize -> exchange int8 payloads + f16 scales -> local
+  dequant-accumulate), after Hansen-Palmus et al. 2024 / Dong et
+  al. 2024: ~4x fewer wire bytes than f32 ``psum``.
+* ``none``         — no collective: the paper's TP-aware
+  gather-elimination made explicit (caller handles the partials).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.spec import CollectiveSpec
+from repro.core.quantization import choose_group_size
+
+_REGISTRY: dict[str, "CollectiveStrategy"] = {}
+
+
+class CollectiveStrategy:
+    """Base class: one named way to close a row-TP layer."""
+
+    #: True when ``apply`` returns a result sharded along its last dim.
+    scatters_output: bool = False
+
+    def apply(self, y: jax.Array, axis: str, spec: CollectiveSpec,
+              policy) -> jax.Array:
+        raise NotImplementedError
+
+    def bytes_on_wire(self, shape: tuple, tp: int,
+                      spec: CollectiveSpec) -> float:
+        raise NotImplementedError
+
+
+def register(name: str):
+    """Decorator: register a ``CollectiveStrategy`` subclass under ``name``."""
+
+    def deco(cls):
+        _REGISTRY[name] = cls()
+        return cls
+
+    return deco
+
+
+def strategies() -> tuple[str, ...]:
+    """Registered collective strategy names."""
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve(name: str) -> CollectiveStrategy:
+    """Look up the strategy for a collective name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"no collective strategy registered for {name!r}; "
+            f"registered strategies: {list(strategies())}") from None
+
+
+def apply(y: jax.Array, axis: str, spec: CollectiveSpec, policy=None):
+    """Close a row-TP layer: run ``spec`` on one rank's partial sums."""
+    return resolve(spec.name).apply(y, axis, spec, policy)
+
+
+def scatters_output(spec: CollectiveSpec) -> bool:
+    return resolve(spec.name).scatters_output
+
+
+def bytes_on_wire(spec: CollectiveSpec, shape, tp: int) -> float:
+    return resolve(spec.name).bytes_on_wire(tuple(shape), int(tp), spec)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _full_bytes(shape, dtype) -> float:
+    return math.prod(shape) * jnp.dtype(dtype).itemsize
+
+
+def _wire_dtype(spec: CollectiveSpec):
+    return spec.wire_dtype if spec.wire_dtype is not None else jnp.float32
+
+
+def _blockwise_quantize(v: jax.Array, bs: int):
+    """Symmetric int8 quantization over size-``bs`` blocks of the last dim.
+
+    Returns ``(q int8 same-shape, scales f16 (..., n // bs))`` — the two
+    wire payloads of the compressed collectives.
+    """
+    vb = v.reshape(*v.shape[:-1], v.shape[-1] // bs, bs)
+    s = jnp.max(jnp.abs(vb), axis=-1) / 127.0
+    s = jnp.maximum(s, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(vb / s[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(v.shape), s.astype(jnp.float16)
+
+
+def _blockwise_dequantize(q: jax.Array, s: jax.Array, bs: int) -> jax.Array:
+    qb = q.reshape(*q.shape[:-1], q.shape[-1] // bs, bs).astype(jnp.float32)
+    return (qb * s.astype(jnp.float32)[..., None]).reshape(q.shape)
+
+
+# ---------------------------------------------------------------------------
+# seed strategies
+# ---------------------------------------------------------------------------
+
+@register("psum")
+class _Psum(CollectiveStrategy):
+    """Full-precision all-reduce — bit-exact with ``jax.lax.psum``."""
+
+    def apply(self, y, axis, spec, policy):
+        return jax.lax.psum(y, axis)
+
+    def bytes_on_wire(self, shape, tp, spec):
+        return _full_bytes(shape, _wire_dtype(spec)) * 2 * (tp - 1) / tp
+
+
+@register("psum_scatter")
+class _PsumScatter(CollectiveStrategy):
+    """Reduce-scatter along the output dim; the caller keeps the output
+    sharded (half the ICI bytes of an all-reduce)."""
+
+    scatters_output = True
+
+    def apply(self, y, axis, spec, policy):
+        return jax.lax.psum_scatter(y, axis, scatter_dimension=y.ndim - 1,
+                                    tiled=True)
+
+    def bytes_on_wire(self, shape, tp, spec):
+        return _full_bytes(shape, _wire_dtype(spec)) * (tp - 1) / tp
+
+
+@register("cast")
+class _Cast(CollectiveStrategy):
+    """All-reduce in a low-bit wire dtype (default bf16): the per-rank f32
+    partial sums are already complete, so only the cross-rank accumulation
+    is lower-precision.  The result stays in the wire dtype."""
+
+    def apply(self, y, axis, spec, policy):
+        return jax.lax.psum(y.astype(spec.wire_dtype), axis)
+
+    def bytes_on_wire(self, shape, tp, spec):
+        return _full_bytes(shape, spec.wire_dtype) * 2 * (tp - 1) / tp
+
+
+@register("none")
+class _NoCollective(CollectiveStrategy):
+    """No epilogue collective: return this rank's partial sums.  The
+    paper's TP-aware gather-elimination made explicit — used when the
+    caller fuses the reduction into a later op (or measures compute
+    alone)."""
+
+    def apply(self, y, axis, spec, policy):
+        return y
+
+    def bytes_on_wire(self, shape, tp, spec):
+        return 0.0
+
+
+@register("quant-int8")
+class _QuantInt8(CollectiveStrategy):
+    """Blockwise-int8 quantized all-reduce (communication compression).
+
+    Both phases of the ring all-reduce carry int8 payloads + f16 scales
+    instead of f32 words (Hansen-Palmus et al. 2024; Dong et al. 2024):
+
+    1. chunk the local partial along the output dim into ``tp`` pieces,
+       quantize blockwise, ``all_to_all`` so each rank receives every
+       rank's int8 copy of the chunk it owns,
+    2. dequant-accumulate the owned chunk in f32 (the only full-precision
+       arithmetic — quantization error does not compound across ranks),
+    3. re-quantize the reduced chunk and ``all_gather`` payloads + scales;
+       every rank dequantizes the assembled result locally.
+
+    When the output dim does not tile ``tp``, falls back to a one-phase
+    variant: quantize the whole partial, all-gather every rank's payload,
+    dequant-accumulate locally (same numerics, more wire bytes).
+    """
+
+    def apply(self, y, axis, spec, policy):
+        tp = jax.lax.psum(1, axis)
+        if tp == 1:
+            return y
+        n = y.shape[-1]
+        out_dtype = y.dtype
+        y32 = y.astype(jnp.float32)
+        if n % tp == 0:
+            chunk = n // tp
+            bs = choose_group_size(chunk, spec.block_size)
+            yc = jnp.moveaxis(y32.reshape(*y32.shape[:-1], tp, chunk), -2, 0)
+            q, s = _blockwise_quantize(yc, bs)
+            q = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0,
+                                   tiled=True)
+            s = jax.lax.all_to_all(s, axis, split_axis=0, concat_axis=0,
+                                   tiled=True)
+            red = jnp.sum(_blockwise_dequantize(q, s, bs), axis=0)
+            q2, s2 = _blockwise_quantize(red, bs)
+            qg = jax.lax.all_gather(q2, axis, axis=q2.ndim - 1, tiled=True)
+            sg = jax.lax.all_gather(s2, axis, axis=s2.ndim - 1, tiled=True)
+            return _blockwise_dequantize(qg, sg, bs).astype(out_dtype)
+        bs = choose_group_size(n, spec.block_size)
+        q, s = _blockwise_quantize(y32, bs)
+        qg = jax.lax.all_gather(q, axis)
+        sg = jax.lax.all_gather(s, axis)
+        return jnp.sum(_blockwise_dequantize(qg, sg, bs),
+                       axis=0).astype(out_dtype)
+
+    def bytes_on_wire(self, shape, tp, spec):
+        if tp <= 1:
+            return 0.0
+        n = shape[-1]
+        n_elts = math.prod(shape)
+        two_phase = n % tp == 0
+        bs = choose_group_size(n // tp if two_phase else n, spec.block_size)
+        payload = n_elts * 1 + (n_elts / bs) * 2   # int8 + f16 scales
+        if two_phase:
+            # all_to_all phase + all_gather phase, each (tp-1)/tp of payload
+            return 2 * payload * (tp - 1) / tp
+        return payload * (tp - 1)                  # one-phase all-gather

@@ -1,0 +1,134 @@
+"""CollectiveSpec — the TP epilogue collective as a first-class plan.
+
+The paper's speedup is a *communication* plan decided a priori: TP-Aware
+pays only the trailing AllReduce while the Naive Algorithm's AllGather
+grows with rank count.  This module names that trailing collective as a
+frozen, hashable spec — strategy name, wire dtype, and quantization
+parameters — so the whole comm plan travels on the ``ExecutionPolicy``
+exactly like the kernel plan does, and compressed collectives
+(Hansen-Palmus et al. 2024; Dong et al. 2024) are one registry entry
+away instead of a new string branch at every call site.
+
+``CollectiveSpec.parse`` accepts the string shorthands used by configs
+and CLIs:
+
+* ``"psum"`` / ``"psum_scatter"`` / ``"none"`` — bit-exact strategies,
+* ``"cast"`` or ``"cast:<dtype>"`` — low-bit wire dtype (default bf16),
+* ``"quant-int8"`` or ``"quant-int8:<block>"`` — blockwise int8
+  quantized all-reduce (block size default 128).
+
+Strategy *implementations* live in ``comm/dispatch.py``; the spec only
+describes the plan.  ``spec.bytes_on_wire(shape, tp)`` resolves the
+strategy's analytic per-device ICI cost so benchmarks and the roofline
+can account communication per strategy without compiling anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CollectiveSpec"]
+
+_WIRE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+                "float16": jnp.float16}
+
+
+def _canon_wire_dtype(dt):
+    """Canonicalize a wire dtype-like (string names allowed; None passes)."""
+    if dt is None:
+        return None
+    if isinstance(dt, str):
+        try:
+            dt = _WIRE_DTYPES[dt]
+        except KeyError:
+            raise ValueError(
+                f"unknown wire dtype {dt!r}, expected one of "
+                f"{sorted(_WIRE_DTYPES)}") from None
+    return jax.dtypes.canonicalize_dtype(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSpec:
+    """One TP epilogue collective, fully specified.
+
+    Frozen + hashable: lives inside ``ExecutionPolicy`` (a jit static
+    argument).  ``name`` is a key into the ``comm/dispatch.py`` registry;
+    the remaining fields parameterize the strategy:
+
+    * ``wire_dtype`` — the dtype that crosses the ICI (``cast``; also the
+      dtype ``bytes_on_wire`` assumes for uncompressed strategies, f32
+      when None),
+    * ``block_size`` / ``bits`` — blockwise quantization parameters for
+      the compressed strategies (``quant-int8``).
+    """
+
+    name: str = "psum"
+    wire_dtype: Optional[Any] = None
+    block_size: int = 128
+    bits: int = 8
+
+    def __post_init__(self):
+        from repro.comm import dispatch  # deferred: dispatch imports spec
+        if self.name not in dispatch.strategies():
+            raise ValueError(
+                f"unknown collective {self.name!r}; registered strategies: "
+                f"{list(dispatch.strategies())}")
+        if self.name == "cast" and self.wire_dtype is None:
+            object.__setattr__(self, "wire_dtype", jnp.bfloat16)
+        object.__setattr__(self, "wire_dtype",
+                           _canon_wire_dtype(self.wire_dtype))
+        if self.block_size <= 0:
+            raise ValueError(f"block_size must be positive, "
+                             f"got {self.block_size}")
+        if self.bits != 8:
+            raise ValueError(
+                f"only 8-bit payloads are implemented, got bits={self.bits}")
+
+    # ---- construction -----------------------------------------------------
+
+    @classmethod
+    def parse(cls, value) -> "CollectiveSpec":
+        """Parse a spec, a string shorthand, or None (-> default psum)."""
+        if value is None:
+            return cls()
+        if isinstance(value, CollectiveSpec):
+            return value
+        if not isinstance(value, str):
+            raise TypeError(
+                f"expected CollectiveSpec or string shorthand, "
+                f"got {type(value).__name__}")
+        name, _, arg = value.partition(":")
+        if name == "cast":
+            return cls(name="cast", wire_dtype=arg or "bfloat16")
+        if name == "quant-int8":
+            return cls(name="quant-int8",
+                       block_size=int(arg) if arg else 128)
+        if arg:
+            raise ValueError(
+                f"collective {name!r} takes no ':' argument (got {value!r})")
+        return cls(name=name)
+
+    def shorthand(self) -> str:
+        """The string form ``parse`` round-trips (for CLIs / logs)."""
+        if self.name == "cast":
+            return f"cast:{jnp.dtype(self.wire_dtype).name}"
+        if self.name == "quant-int8":
+            return f"quant-int8:{self.block_size}"
+        return self.name
+
+    def with_(self, **kw) -> "CollectiveSpec":
+        return dataclasses.replace(self, **kw)
+
+    # ---- analytic cost ----------------------------------------------------
+
+    def bytes_on_wire(self, shape, tp: int) -> float:
+        """Analytic per-device ICI bytes to close a row-TP layer whose
+        per-rank partial output has ``shape``, over ``tp`` ranks (ring
+        cost model, matching ``launch/roofline.py``)."""
+        from repro.comm import dispatch
+        return dispatch.resolve(self.name).bytes_on_wire(
+            tuple(shape), int(tp), self)

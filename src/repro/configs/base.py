@@ -50,11 +50,12 @@ class QuantConfig:
     # Runtime half of the deployment plan, consumed through
     # ``ExecutionPolicy.from_config`` (core/policy.py): the dequant-GEMM
     # kernel ("auto" picks pallas on TPU for ordered layouts, else jnp),
-    # the GEMM compute dtype, and the row-TP epilogue collective.
+    # the GEMM compute dtype, and the row-TP epilogue collective — a
+    # ``CollectiveSpec`` shorthand dispatched by ``comm/dispatch.py``
+    # (e.g. "psum", "psum_scatter", "cast:bfloat16", "quant-int8", "none").
     backend: str = "auto"        # "auto" | kernels.dispatch registry key
     compute_dtype: str = "float32"   # "float32" | "bfloat16" | "float16"
-    reduce: str = "psum"         # "psum" | "psum_scatter" (beyond-paper)
-    reduce_dtype: Optional[str] = None  # e.g. "bfloat16" low-bit reduction
+    collective: str = "psum"     # comm.dispatch registry shorthand
 
 
 @dataclasses.dataclass(frozen=True)

@@ -107,22 +107,19 @@ def plan_attention_vo(
 
 def attention_vo_reference(x, q_heads, attn_weights, pp: PlannedPair, *,
                            n_heads: int, n_kv_heads: int, head_dim: int,
-                           policy=None, compute_dtype=None) -> jax.Array:
+                           policy=None) -> jax.Array:
     """Reference forward: X -> V -> attention-mix -> out_proj, folded plan.
 
     ``attn_weights``: (B, H, S, T) softmaxed scores (already computed from
     Q/K — V-channel permutations cannot affect them).  Used by the
     exactness tests; the serving path fuses this into the model's
     attention.  ``policy``: ``ExecutionPolicy`` selecting kernel/dtypes
-    for the two quantized GEMMs (None = defaults; ``compute_dtype=`` is
-    the deprecated kwarg spelling, one-PR shim).
+    for the two quantized GEMMs (None = defaults).
     """
     from repro.core import schemes
-    from repro.core.policy import _UNSET, resolve_policy
+    from repro.core.policy import resolve_policy
 
-    policy = resolve_policy(
-        policy, where="attention_vo_reference",
-        compute_dtype=compute_dtype if compute_dtype is not None else _UNSET)
+    policy = resolve_policy(policy)
     compute_dtype = policy.compute_dtype
     g = n_heads // n_kv_heads
     xin = jnp.take(x, pp.p1_up, axis=-1) if pp.p1_up is not None else x

@@ -2,12 +2,20 @@
 
 The paper's contribution is a plan decided before the first token: which
 layout scheme the weights were prepared in (Algorithms 1-3), which kernel
-executes the dequant-GEMM, what dtypes compute/accumulate/reduce in, and
-which collective closes the row-TP layer.  The repo used to thread that
-plan through the stack as loose kwargs (``scheme=``, ``backend=``,
-``reduce=``, ``compute_dtype=``, block sizes) duplicated at every call
-site; this module makes it a single frozen, hashable record that flows
-from config to kernel unchanged.
+executes the dequant-GEMM, what dtypes compute/accumulate in, and which
+collective closes the row-TP layer.  The repo used to thread that plan
+through the stack as loose kwargs duplicated at every call site; this
+module makes it a single frozen, hashable record that flows from config
+to kernel unchanged.
+
+Both halves of the plan dispatch through registries:
+
+* ``policy.backend`` — key into ``kernels/dispatch.py``
+  (``(layout kind, backend) -> kernel``),
+* ``policy.collective`` — a ``CollectiveSpec`` resolved by
+  ``comm/dispatch.py`` (``name -> strategy``); string shorthands like
+  ``"psum"``, ``"cast:bfloat16"`` or ``"quant-int8"`` are accepted and
+  parsed via ``CollectiveSpec.parse``.
 
 Construction paths:
 
@@ -18,32 +26,25 @@ Construction paths:
   layout allows it (ordered layouts on a real TPU), fall back to the
   XLA-fused ``jnp`` path otherwise.
 * ``ExecutionPolicy()`` — the historical defaults (tp-aware / jnp / f32 /
-  psum), bit-identical to the old kwarg defaults.
+  psum), bit-identical to the original kwarg defaults.
 
 Consumption: ``PlannedPair.forward(x, policy, mesh=...)`` is the canonical
-runtime entry point; ``kernels/dispatch.py`` resolves
-``(layout kind, policy.backend)`` to the kernel callable.  See DESIGN.md
-§1 for the architecture.
+runtime entry point.  See DESIGN.md §1 for the architecture.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.comm.spec import CollectiveSpec
+
 __all__ = [
     "KernelTiling", "ExecutionPolicy", "DEFAULT_POLICY", "resolve_policy",
 ]
-
-#: Sentinel distinguishing "kwarg not passed" from an explicit None in the
-#: legacy-kwarg deprecation shims (``resolve_policy``).
-_UNSET = object()
-
-_REDUCES = ("psum", "psum_scatter", "none")
 
 
 def _canon_dtype(dt):
@@ -76,15 +77,16 @@ class ExecutionPolicy:
     ``shard_map`` closures.  ``scheme`` records the *offline* layout the
     weights were planned with (the runtime always trusts the plan pytree's
     own ``scheme`` field; a policy's copy exists so config-time code can
-    carry the full plan in one object).
+    carry the full plan in one object).  ``collective`` is the row-TP
+    epilogue plan — a ``CollectiveSpec`` dispatched by
+    ``comm/dispatch.py`` (string shorthands accepted).
     """
 
     scheme: str = "tp-aware"
     backend: str = "jnp"            # key into kernels.dispatch registry
     compute_dtype: Any = jnp.float32
     accum_dtype: Any = jnp.float32
-    reduce: str = "psum"            # row-TP epilogue collective
-    reduce_dtype: Optional[Any] = None  # e.g. bf16: low-bit reduction
+    collective: Union[CollectiveSpec, str] = CollectiveSpec()
     tiling: KernelTiling = KernelTiling()
 
     def __post_init__(self):
@@ -92,15 +94,12 @@ class ExecutionPolicy:
         if self.scheme not in SCHEMES:
             raise ValueError(
                 f"unknown scheme {self.scheme!r}, expected one of {SCHEMES}")
-        if self.reduce not in _REDUCES:
-            raise ValueError(
-                f"unknown reduce {self.reduce!r}, expected one of {_REDUCES}")
+        object.__setattr__(self, "collective",
+                           CollectiveSpec.parse(self.collective))
         object.__setattr__(self, "compute_dtype",
                            _canon_dtype(self.compute_dtype))
         object.__setattr__(self, "accum_dtype",
                            _canon_dtype(self.accum_dtype))
-        object.__setattr__(self, "reduce_dtype",
-                           _canon_dtype(self.reduce_dtype))
 
     # ---- builders ---------------------------------------------------------
 
@@ -148,42 +147,17 @@ class ExecutionPolicy:
                     f"{sorted(k for k in dtypes if k)}") from None
 
         compute = lookup("compute_dtype", qc.compute_dtype)
-        reduce_dt = lookup("reduce_dtype", qc.reduce_dtype)
+        collective = CollectiveSpec.parse(qc.collective)
         if qc.backend == "auto":
             return cls.auto(qc.scheme, compute_dtype=compute,
-                            reduce=qc.reduce, reduce_dtype=reduce_dt)
+                            collective=collective)
         return cls(scheme=qc.scheme, backend=qc.backend,
-                   compute_dtype=compute, reduce=qc.reduce,
-                   reduce_dtype=reduce_dt)
+                   compute_dtype=compute, collective=collective)
 
 
 DEFAULT_POLICY = ExecutionPolicy()
 
 
-def resolve_policy(policy: Optional[ExecutionPolicy] = None, *,
-                   where: str = "this function",
-                   backend=_UNSET, compute_dtype=_UNSET,
-                   reduce=_UNSET, reduce_dtype=_UNSET) -> ExecutionPolicy:
-    """Deprecation shim: translate legacy loose kwargs into a policy.
-
-    New call sites pass ``policy`` and nothing else.  Old call sites that
-    still pass ``backend=``/``compute_dtype=``/``reduce=``/``reduce_dtype=``
-    keep working for one PR but get a ``DeprecationWarning``; mixing both
-    styles is an error.
-    """
-    legacy = {k: v for k, v in (("backend", backend),
-                                ("compute_dtype", compute_dtype),
-                                ("reduce", reduce),
-                                ("reduce_dtype", reduce_dtype))
-              if v is not _UNSET}
-    if not legacy:
-        return policy if policy is not None else DEFAULT_POLICY
-    if policy is not None:
-        raise TypeError(
-            f"{where}: pass either a policy or legacy kwargs, not both "
-            f"(got policy and {sorted(legacy)})")
-    warnings.warn(
-        f"{where}: keyword deployment arguments {sorted(legacy)} are "
-        f"deprecated; construct an ExecutionPolicy instead "
-        f"(repro.core.policy)", DeprecationWarning, stacklevel=3)
-    return dataclasses.replace(DEFAULT_POLICY, **legacy)
+def resolve_policy(policy: Optional[ExecutionPolicy] = None) -> ExecutionPolicy:
+    """``policy`` if given, else the historical defaults."""
+    return policy if policy is not None else DEFAULT_POLICY

@@ -66,7 +66,7 @@ class PlannedPair:
         mesh, the paper's explicit-collective shard_map path runs over
         mesh axis ``axis``.  The *layout* is always ``self.scheme`` (the
         plan is baked into the weights offline); the policy supplies the
-        kernel backend, dtypes, and reduce strategy.
+        kernel backend, dtypes, and trailing ``CollectiveSpec``.
         """
         from repro.core import schemes
 

@@ -7,17 +7,17 @@ Three schemes, one arithmetic result (property-tested):
 * ``exllama`` — Algorithm-1 sorted layout.  TP (**paper's "Naive
   Algorithm"**, Algorithm 2): AllGather Y1 -> permute by P2 -> chunk.
 * ``tp-aware`` — Algorithm 3: the P2 fold happened offline, so the TP path
-  is GEMM -> GEMM -> AllReduce.  Strictly fewer collectives.
+  is GEMM -> GEMM -> trailing collective.  Strictly fewer collectives.
 
 All functions are shape-polymorphic over leading batch dims: ``x`` is
 ``(..., K1)``.
 
-Runtime knobs (kernel backend, compute/reduce dtypes, collective
-strategy, tiling) arrive as one ``ExecutionPolicy`` (``core/policy.py``);
+Runtime knobs arrive as one ``ExecutionPolicy`` (``core/policy.py``);
 ``PlannedPair.forward(x, policy, mesh=...)`` is the canonical entry
-point.  The old loose kwargs (``backend=``, ``compute_dtype=``,
-``reduce=``, ``reduce_dtype=``) still work for one PR via
-``resolve_policy`` but emit a ``DeprecationWarning``.
+point.  The kernel half of the plan dispatches through
+``kernels/dispatch.py`` (``policy.backend``); the collective half through
+``comm/dispatch.py`` (``policy.collective``) — no epilogue branching
+happens here.
 """
 
 from __future__ import annotations
@@ -29,8 +29,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import dispatch as comm
 from repro.core import compat
-from repro.core.policy import (_UNSET, ExecutionPolicy, resolve_policy)
+from repro.core.policy import ExecutionPolicy, resolve_policy
 from repro.core.quantization import QuantizedLinear
 from repro.core.reorder import PlannedPair
 
@@ -49,8 +50,7 @@ ACTIVATIONS: dict[str, Callable] = {
 
 
 def qmatmul(x: jax.Array, ql: QuantizedLinear,
-            policy: Optional[ExecutionPolicy] = None, *,
-            backend=_UNSET, compute_dtype=_UNSET) -> jax.Array:
+            policy: Optional[ExecutionPolicy] = None) -> jax.Array:
     """``x @ dequantize(ql)`` via the policy-selected kernel.
 
     The kernel is resolved from ``(ql.kind, policy.backend)`` by the
@@ -58,11 +58,9 @@ def qmatmul(x: jax.Array, ql: QuantizedLinear,
     weight (XLA fuses the dequant into the GEMM epilogue on TPU; also what
     the dry-run lowers so cost_analysis sees real FLOPs/bytes),
     ``"pallas"`` is the fused kernel (TPU hot path; interpret=True on
-    CPU), ``"ref"`` the pure-jnp oracle.  ``backend=``/``compute_dtype=``
-    are the deprecated kwarg spelling (one-PR shim).
+    CPU), ``"ref"`` the pure-jnp oracle.
     """
-    policy = resolve_policy(policy, where="qmatmul", backend=backend,
-                            compute_dtype=compute_dtype)
+    policy = resolve_policy(policy)
     from repro.kernels import dispatch  # lazy: kernels optional at import
 
     return dispatch.qmatmul(x, ql, policy)
@@ -78,12 +76,9 @@ def pair_forward_reference(
     policy: Optional[ExecutionPolicy] = None,
     *,
     activation: Optional[str] = None,
-    compute_dtype=_UNSET,
-    backend=_UNSET,
 ) -> jax.Array:
     """Single-device forward of a planned pair; ground truth for TP tests."""
-    policy = resolve_policy(policy, where="pair_forward_reference",
-                            backend=backend, compute_dtype=compute_dtype)
+    policy = resolve_policy(policy)
     act = ACTIVATIONS[activation or "identity"]
     mm = functools.partial(qmatmul, policy=policy)
 
@@ -159,14 +154,17 @@ def _pair_local_forward(
 
     ``x`` is the local batch shard, replicated along ``axis``; the planned
     pair holds this rank's weight shards (column shards for up/gate, row
-    shard for down, local P2 chunk for exllama).
+    shard for down, local P2 chunk for exllama).  The trailing collective
+    is whatever ``policy.collective`` names — resolved by the
+    ``comm/dispatch.py`` registry, never branched here.
     """
     act = ACTIVATIONS[activation or "identity"]
     mm = functools.partial(qmatmul, policy=policy)
 
     if pp.scheme == "naive-actorder":
         # Original-order columns: local Y1 chunk already feeds the matching
-        # down row-shard.  Comm: final AllReduce only.  (Slow metadata path.)
+        # down row-shard.  Comm: trailing collective only.  (Slow metadata
+        # path.)
         y1 = mm(x, pp.up)
         if pp.gate is not None:
             y1 = act(mm(x, pp.gate)) * y1
@@ -201,21 +199,8 @@ def _pair_local_forward(
     else:
         raise ValueError(f"unknown scheme {pp.scheme!r}")
 
-    if policy.reduce_dtype is not None:
-        # beyond-paper: collective in bf16 — halves ICI bytes of the
-        # trailing all-reduce; the f32 partial sums are already complete
-        # per-rank, so only the cross-rank accumulation is lower-precision.
-        y2 = y2.astype(policy.reduce_dtype)
-    if policy.reduce == "psum":
-        return jax.lax.psum(y2, axis)                            # l.6 / l.3
-    if policy.reduce == "psum_scatter":
-        # beyond-paper epilogue: reduce-scatter along the output dim; the
-        # caller keeps the output sharded (halves ICI bytes vs all-reduce).
-        return jax.lax.psum_scatter(y2, axis, scatter_dimension=y2.ndim - 1,
-                                    tiled=True)
-    if policy.reduce == "none":
-        return y2
-    raise ValueError(f"unknown reduce {policy.reduce!r}")
+    # l.6 / l.3: close the row-TP layer with the planned collective.
+    return comm.apply(y2, axis, policy.collective, policy)
 
 
 def pair_forward_tp(
@@ -227,10 +212,6 @@ def pair_forward_tp(
     axis: str = "model",
     batch_axes: tuple = (),
     activation: Optional[str] = None,
-    compute_dtype=_UNSET,
-    backend=_UNSET,
-    reduce=_UNSET,
-    reduce_dtype=_UNSET,
 ) -> jax.Array:
     """Tensor-parallel forward over mesh axis ``axis``.
 
@@ -239,12 +220,10 @@ def pair_forward_tp(
     canonical TP sharding (see ``pair_pspecs``); under jit, GSPMD moves the
     globally-laid-out arrays into place, or callers pass pre-sharded arrays.
     """
-    policy = resolve_policy(policy, where="pair_forward_tp",
-                            backend=backend, compute_dtype=compute_dtype,
-                            reduce=reduce, reduce_dtype=reduce_dtype)
+    policy = resolve_policy(policy)
     bspec = (batch_axes if batch_axes else None,) + (None,) * (x.ndim - 1)
     x_spec = P(*bspec)
-    out_last = axis if policy.reduce == "psum_scatter" else None
+    out_last = axis if comm.scatters_output(policy.collective) else None
     out_spec = P(*((bspec[0],) + (None,) * (x.ndim - 2) + (out_last,)))
 
     fn = functools.partial(

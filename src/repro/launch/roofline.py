@@ -37,10 +37,22 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 # matches e.g.:  %all-gather.3 = bf16[4,1792]{1,0} all-gather(%x), ...
+# ('-done' lines never match; an async '-start' is counted once here)
 _INSTR_RE = re.compile(
-    r"=\s*(?:\([^)]*\)\s*)?([a-z0-9_]+)\[([\d,]*)\][^ ]*\s+"
+    r"=\s*([a-z0-9_]+)\[([\d,]*)\][^ ]*\s+"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start)?\(")
+# tuple-result form that *synchronous* multi-operand collectives lower to:
+#   %all-to-all.4 = (s8[8,4096]{...}, /*index=1*/ f16[8,32]{...}) all-to-all(...)
+# the result bytes are the sum of every tuple entry.  Deliberately does
+# NOT accept '-start' here: async tuple results alias their operands
+# ((in, out) pairs), so summing the entries would double-count — those
+# keep the old behavior (simple form counted, tuple form skipped).
+_TUPLE_INSTR_RE = re.compile(
+    r"=\s*\((.*?)\)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"\(")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([\d,]*)\]")
 _GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
@@ -67,10 +79,16 @@ def parse_collective_bytes(hlo_text: str, *, chips: int) -> dict:
     counts = {k: 0 for k in _COLLECTIVES}
     for line in hlo_text.splitlines():
         m = _INSTR_RE.search(line)
-        if not m:
-            continue
-        dtype, dims, kind = m.groups()
-        r = _shape_bytes(dtype, dims)
+        if m:
+            dtype, dims, kind = m.groups()
+            r = _shape_bytes(dtype, dims)
+        else:
+            m = _TUPLE_INSTR_RE.search(line)
+            if not m:
+                continue
+            shapes, kind = m.groups()
+            r = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(shapes))
         g = chips
         mg = _GROUPS_RE.search(line)
         if mg:

@@ -12,6 +12,7 @@ import time
 import jax
 import numpy as np
 
+from repro.comm import CollectiveSpec, dispatch as comm_dispatch
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.policy import ExecutionPolicy
 from repro.launch import mesh as mesh_lib
@@ -19,6 +20,16 @@ from repro.models.common import ParallelContext, REPLICATED
 from repro.runtime.sampling import SamplingConfig
 from repro.runtime.scheduler import Request, Scheduler
 from repro.runtime.serve import make_engine
+
+
+def _collective(value: str) -> str:
+    """argparse type: validate against the comm registry, keep the string
+    (the config stores the shorthand; the policy parses it once)."""
+    try:
+        CollectiveSpec.parse(value)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+    return value
 
 
 def main(argv=None):
@@ -30,11 +41,12 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto",
                     help="dequant-GEMM kernel (auto | any backend "
                          "registered in kernels.dispatch)")
-    ap.add_argument("--reduce", default="psum",
-                    choices=["psum", "psum_scatter"])
-    ap.add_argument("--reduce-dtype", default=None,
-                    choices=[None, "bfloat16", "float16"],
-                    help="low-bit trailing collective (beyond-paper)")
+    ap.add_argument("--collective", default="psum", type=_collective,
+                    help="row-TP epilogue collective spec; any strategy "
+                         "registered in comm.dispatch: "
+                         + ", ".join(comm_dispatch.strategies())
+                         + " (parameterized shorthands like cast:float16 "
+                           "or quant-int8:64 also accepted)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-budget", type=int, default=32)
@@ -49,8 +61,7 @@ def main(argv=None):
     # the whole deployment plan lives on the config; the policy below is
     # derived from it and flows unchanged to the kernels
     cfg = cfg.with_quant(mode="mlp", scheme=args.scheme,
-                         backend=args.backend, reduce=args.reduce,
-                         reduce_dtype=args.reduce_dtype)
+                         backend=args.backend, collective=args.collective)
     policy = ExecutionPolicy.from_config(cfg)
 
     if args.tp > 1:
@@ -84,7 +95,8 @@ def main(argv=None):
         print(f"req {rid}: prompt {len(r.prompt):3d} -> {r.output[:8]}...")
     print(f"\n{len(done)} requests, {total_new} tokens in {dt:.1f}s "
           f"({total_new / dt:.1f} tok/s) [scheme={args.scheme} "
-          f"backend={policy.backend} reduce={policy.reduce}]")
+          f"backend={policy.backend} "
+          f"collective={policy.collective.shorthand()}]")
 
 
 if __name__ == "__main__":

@@ -35,12 +35,9 @@ class ParallelContext:
     shard_map_mlp: bool = True     # paper's explicit-collective MLP path
     remat: bool = False
     # The deployment plan the quantized MLP pairs execute under (kernel
-    # backend, compute/reduce dtypes, collective strategy).  None falls
-    # back to the legacy mlp_reduce/mlp_reduce_dtype fields below, which
-    # are kept for one PR — prefer ``policy=ExecutionPolicy(...)``.
+    # backend, compute dtype, collective spec).  None means the historical
+    # defaults (DEFAULT_POLICY: tp-aware / jnp / f32 / psum).
     policy: Optional[ExecutionPolicy] = None
-    mlp_reduce: str = "psum"       # DEPRECATED: use policy.reduce
-    mlp_reduce_dtype: object = None  # DEPRECATED: use policy.reduce_dtype
     # Long-seq attention Q-chunking: lax.scan over chunks (True, memory-
     # bounded — the deployment default) or a python-unrolled loop (False —
     # used by the dry-run cost probes, because XLA's cost_analysis counts a
@@ -54,21 +51,8 @@ class ParallelContext:
     @property
     def execution_policy(self) -> ExecutionPolicy:
         """The effective deployment plan: ``policy`` when set, else the
-        legacy per-field spelling translated (bit-identical defaults).
-        Mixing both spellings is ambiguous and errors."""
-        legacy_set = (self.mlp_reduce != "psum"
-                      or self.mlp_reduce_dtype is not None)
-        if self.policy is not None:
-            if legacy_set:
-                raise ValueError(
-                    "ParallelContext got both policy= and legacy "
-                    "mlp_reduce/mlp_reduce_dtype fields; set the reduce "
-                    "strategy on the ExecutionPolicy")
-            return self.policy
-        if not legacy_set:
-            return DEFAULT_POLICY
-        return DEFAULT_POLICY.with_(reduce=self.mlp_reduce,
-                                    reduce_dtype=self.mlp_reduce_dtype)
+        historical defaults."""
+        return self.policy if self.policy is not None else DEFAULT_POLICY
 
     def shard(self, x: jax.Array, *spec) -> jax.Array:
         if self.mesh is None:

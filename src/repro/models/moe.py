@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.comm import CollectiveSpec
 from repro.core import compat, schemes
 from repro.core.policy import ExecutionPolicy
 
@@ -106,13 +107,14 @@ def _expert_ffn_local(cfg: ModelConfig, experts, xs, tp_axis: str,
     from repro.core.reorder import PlannedPair
 
     if isinstance(experts, PlannedPair):
-        # within-expert TP always closes with a full-precision psum (the
-        # EP combine needs every rank's complete expert output, and the
-        # low-bit reduce_dtype knob targets the dense-MLP trailing
+        # within-expert TP always closes with a full-precision psum spec
+        # (the EP combine needs every rank's complete expert output, and
+        # the compressed-collective knobs target the dense-MLP trailing
         # collective, not this inner reduction); the vmapped per-expert
         # GEMMs stay on the jnp kernel — Pallas under vmap-of-shard_map
         # is not a supported lowering.
-        pol = policy.with_(reduce="psum", reduce_dtype=None, backend="jnp")
+        pol = policy.with_(collective=CollectiveSpec(name="psum"),
+                           backend="jnp")
         fn = functools.partial(
             schemes._pair_local_forward, axis=tp_axis,
             activation=cfg.activation, policy=pol)

@@ -32,9 +32,10 @@ class Engine:
     ctx: ParallelContext = REPLICATED
     max_seq: int = 2048
     window: Optional[int] = None
-    # The deployment plan every quantized GEMM in this engine executes
-    # under.  None derives it from the model config; the resolved policy
-    # is injected into ``ctx`` so model code sees one source of truth.
+    # The deployment plan every quantized GEMM — kernel backend, dtypes,
+    # and the row-TP epilogue ``CollectiveSpec`` — executes under.  None
+    # derives it from the model config; the resolved policy is injected
+    # into ``ctx`` so model code sees one source of truth.
     policy: Optional[ExecutionPolicy] = None
 
     def __post_init__(self):

@@ -1,0 +1,248 @@
+"""CollectiveSpec / comm-dispatch subsystem.
+
+Covers the redesign's acceptance criteria:
+* ``CollectiveSpec.parse`` round-trips every registered strategy and its
+  parameterized shorthands; unknown names error with the registered list,
+* ``psum`` / ``psum_scatter`` specs are bit-exact with the raw ``jax.lax``
+  primitives under multi-device shard_map (the pre-redesign path),
+* ``cast`` / ``quant-int8`` stay within tolerances scaled to their wire
+  dtype,
+* ``bytes_on_wire`` matches the ring cost model and shows the compression
+  win (quant-int8 ≈ 25% of f32 psum at TP=8).
+
+Multi-device cases run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (XLA locks the
+host device count at first init).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import pytest
+
+from repro.comm import CollectiveSpec, dispatch
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(script: str, devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+# ---------------------------------------------------------------------------
+# spec / registry (no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_registry_seed_strategies():
+    assert dispatch.strategies() == (
+        "cast", "none", "psum", "psum_scatter", "quant-int8")
+
+
+@pytest.mark.parametrize("name", dispatch.strategies())
+def test_parse_round_trips_every_strategy(name):
+    spec = CollectiveSpec.parse(name)
+    assert spec.name == name
+    # shorthand() is the inverse of parse()
+    assert CollectiveSpec.parse(spec.shorthand()) == spec
+    # parse is idempotent on specs
+    assert CollectiveSpec.parse(spec) is spec
+
+
+def test_parse_shorthands():
+    assert CollectiveSpec.parse(None) == CollectiveSpec()
+    assert CollectiveSpec.parse("psum") == CollectiveSpec(name="psum")
+    c = CollectiveSpec.parse("cast")
+    assert c.wire_dtype == jnp.dtype(jnp.bfloat16)
+    assert CollectiveSpec.parse("cast:float16").wire_dtype == \
+        jnp.dtype(jnp.float16)
+    q = CollectiveSpec.parse("quant-int8:64")
+    assert (q.name, q.block_size, q.bits) == ("quant-int8", 64, 8)
+    with pytest.raises(ValueError, match="takes no ':' argument"):
+        CollectiveSpec.parse("psum:4")
+    with pytest.raises(TypeError, match="string shorthand"):
+        CollectiveSpec.parse(123)
+
+
+def test_unknown_strategy_lists_registered_names():
+    with pytest.raises(ValueError, match="registered strategies.*psum"):
+        CollectiveSpec(name="allreduce-fp4")
+    with pytest.raises(ValueError, match="quant-int8"):
+        dispatch.resolve("nope")
+
+
+def test_spec_validates_params():
+    with pytest.raises(ValueError, match="block_size"):
+        CollectiveSpec(name="quant-int8", block_size=0)
+    with pytest.raises(ValueError, match="8-bit"):
+        CollectiveSpec(name="quant-int8", bits=4)
+    with pytest.raises(ValueError, match="unknown wire dtype"):
+        CollectiveSpec.parse("cast:fp16")
+    # hashable (lives inside the jit-static ExecutionPolicy)
+    assert hash(CollectiveSpec.parse("quant-int8")) == hash(
+        CollectiveSpec(name="quant-int8"))
+
+
+def test_policy_carries_collective_spec():
+    from repro.core.policy import ExecutionPolicy
+
+    pol = ExecutionPolicy(collective="quant-int8:64")
+    assert pol.collective == CollectiveSpec(name="quant-int8", block_size=64)
+    assert not hasattr(pol, "reduce") and not hasattr(pol, "reduce_dtype")
+    with pytest.raises(ValueError, match="registered strategies"):
+        ExecutionPolicy(collective="allgather")
+
+
+# ---------------------------------------------------------------------------
+# analytic bytes accounting
+# ---------------------------------------------------------------------------
+
+def test_bytes_on_wire_ring_model():
+    shape, tp = (8, 4096), 8
+    n = 8 * 4096
+    psum = CollectiveSpec(name="psum").bytes_on_wire(shape, tp)
+    assert psum == pytest.approx(4 * n * 2 * (tp - 1) / tp)
+    assert CollectiveSpec(name="psum_scatter").bytes_on_wire(shape, tp) == \
+        pytest.approx(psum / 2)
+    assert CollectiveSpec.parse("cast").bytes_on_wire(shape, tp) == \
+        pytest.approx(psum / 2)     # bf16 wire = half the f32 words
+    assert CollectiveSpec(name="none").bytes_on_wire(shape, tp) == 0.0
+    for spec in map(CollectiveSpec.parse, dispatch.strategies()):
+        assert spec.bytes_on_wire(shape, 1) == 0.0
+
+
+def test_quant_int8_bytes_quarter_of_psum_at_tp8():
+    """The acceptance headline: int8 payloads + f16 scales land at
+    ~(1 + 2/block)/4 ≈ 25% of the f32 psum bytes."""
+    shape, tp = (8, 8192), 8
+    psum = CollectiveSpec(name="psum").bytes_on_wire(shape, tp)
+    quant = CollectiveSpec.parse("quant-int8").bytes_on_wire(shape, tp)
+    assert quant / psum == pytest.approx((1 + 2 / 128) / 4)
+    assert quant / psum <= 0.26
+    # the non-tiling fallback is honestly more expensive, never free
+    odd = CollectiveSpec.parse("quant-int8").bytes_on_wire((8, 8193), tp)
+    assert odd > quant
+
+
+# ---------------------------------------------------------------------------
+# multi-device semantics (subprocess, 8 host devices)
+# ---------------------------------------------------------------------------
+
+def test_collectives_vs_lax_primitives_under_shard_map():
+    """psum/psum_scatter specs are BIT-exact with the jax.lax primitives
+    (the pre-redesign epilogue); cast/quant-int8 meet wire-dtype-scaled
+    error bounds; none returns the untouched partials."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.comm import CollectiveSpec, dispatch
+        from repro.core import compat
+
+        TP = 8
+        mesh = jax.make_mesh((TP,), ("model",))
+        y = jax.random.normal(jax.random.PRNGKey(0), (TP, 16, 256)) * 3.0
+
+        def close(spec, out_last):
+            # per-rank partial = y[rank]; global result keeps the size-1
+            # leading dim, squeezed for comparison below
+            g = compat.shard_map(
+                lambda v: dispatch.apply(v, "model", spec, None),
+                mesh=mesh, in_specs=P("model"),
+                out_specs=P(None, None, out_last))(y)
+            return np.asarray(g, dtype=np.float32)[0]
+
+        ref = np.asarray(jnp.sum(y, axis=0))        # the true reduction
+        psum = compat.shard_map(
+            lambda v: jax.lax.psum(v, "model"), mesh=mesh,
+            in_specs=P("model"), out_specs=P(None, None, None))(y)
+        np.testing.assert_array_equal(
+            close(CollectiveSpec("psum"), None), np.asarray(psum)[0])
+        print("OK psum-bit-exact")
+
+        scat = compat.shard_map(
+            lambda v: jax.lax.psum_scatter(
+                v, "model", scatter_dimension=2, tiled=True),
+            mesh=mesh, in_specs=P("model"),
+            out_specs=P(None, None, "model"))(y)
+        np.testing.assert_array_equal(
+            close(CollectiveSpec("psum_scatter"), "model"),
+            np.asarray(scat)[0])
+        print("OK psum_scatter-bit-exact")
+
+        # lossy strategies: tolerance scaled to the wire representation —
+        # TP rank contributions each rounded once (cast) or quantized
+        # twice (quant-int8, 1/254 of the block amplitude per round)
+        scale = np.abs(ref).max()
+        lossy = {}
+        for short in ("cast", "cast:float16"):
+            spec = CollectiveSpec.parse(short)
+            lossy[short] = (spec, TP * float(jnp.finfo(spec.wire_dtype).eps))
+        qspec = CollectiveSpec.parse("quant-int8")
+        lossy["quant-int8"] = (qspec, (TP + 1) * 2.0 ** (1 - qspec.bits))
+        for short, (spec, t) in lossy.items():
+            err = np.abs(close(spec, None) - ref).max() / scale
+            assert err < t, (short, err, t)
+            assert err > 0, short            # genuinely lossy on the wire
+            print("OK", short, f"err={err:.1e} < tol={t:.1e}")
+
+        part = close(CollectiveSpec("none"), None)
+        np.testing.assert_array_equal(part, np.asarray(y[0]))
+        print("OK none-passthrough")
+    """)
+    assert out.count("OK") == 6
+
+
+def test_quant_int8_non_tiling_fallback_and_pair_forward():
+    """quant-int8 on an output dim that does NOT tile TP (one-phase
+    all-gather fallback), plus the full PlannedPair TP forward for every
+    strategy against the single-device reference."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.comm import CollectiveSpec, dispatch
+        from repro.core import compat, reorder
+        from repro.core.policy import ExecutionPolicy
+
+        mesh = jax.make_mesh((8,), ("model",))
+        y = jax.random.normal(jax.random.PRNGKey(1), (8, 4, 129))
+        ref = np.asarray(jnp.sum(y, axis=0))
+        out129 = compat.shard_map(
+            lambda v: dispatch.apply(
+                v, "model", CollectiveSpec.parse("quant-int8"), None),
+            mesh=mesh, in_specs=P("model"),
+            out_specs=P(None, None, None))(y)
+        err = np.abs(np.asarray(out129) - ref).max() / np.abs(ref).max()
+        assert err < 8 * 1 / 127.0, err     # one quant round only
+        print("OK fallback", f"{err:.1e}")
+
+        rng = jax.random.PRNGKey(0)
+        r = jax.random.split(rng, 4)
+        k1, n1, n2, m = 128, 256, 128, 16
+        pp = reorder.plan_pair(
+            jax.random.normal(r[0], (k1, n1)),
+            jax.random.normal(r[2], (n1, n2)),
+            w_gate=jax.random.normal(r[1], (k1, n1)), scheme="tp-aware",
+            group_size_up=32, group_size_down=32, rng=rng)
+        x = jax.random.normal(r[3], (m, k1))
+        ref = np.asarray(pp.forward(x, activation="silu"))
+        tol = {"psum": 1e-5, "psum_scatter": 1e-5, "cast": 2e-2,
+               "quant-int8": 5e-2}
+        with mesh:
+            for short, t in tol.items():
+                pol = ExecutionPolicy(collective=short)
+                y = np.asarray(pp.forward(x, pol, mesh, activation="silu"),
+                               dtype=np.float32)
+                err = np.abs(y - ref).max() / np.abs(ref).max()
+                assert err < t, (short, err)
+                print("OK pair", short, f"{err:.1e}")
+    """)
+    assert out.count("OK") == 5

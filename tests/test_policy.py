@@ -1,23 +1,23 @@
 """ExecutionPolicy plumbing: config round-trip, dispatch resolution, and
-exact equivalence of the policy path with the legacy kwarg path.
+context/engine policy threading.
 
 Covers the acceptance criteria of the policy redesign:
-* ``ExecutionPolicy.from_config`` works for every arch config,
+* ``ExecutionPolicy.from_config`` works for every arch config and parses
+  the ``QuantConfig.collective`` shorthand into a ``CollectiveSpec``,
 * ``kernels/dispatch.py`` resolves every seeded (kind, backend) pair and
   errors helpfully on unknown backends,
-* ``PlannedPair.forward`` with the default policy is bit-exactly the
-  legacy kwarg path for all three schemes,
-* legacy kwargs still work but emit ``DeprecationWarning``.
+* the policy is the only spelling — there are no legacy loose kwargs and
+  no ``reduce``/``reduce_dtype`` string fields anywhere.
 """
 
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.comm import CollectiveSpec
 from repro.configs import ARCH_IDS, QuantConfig, get_config
 from repro.core import reorder, schemes
 from repro.core.policy import (DEFAULT_POLICY, ExecutionPolicy,
@@ -47,27 +47,25 @@ def test_from_config_every_arch(arch):
     pol = ExecutionPolicy.from_config(cfg)
     assert pol.scheme == cfg.quant.scheme
     assert pol.backend in dispatch.backends()
-    assert pol.reduce == cfg.quant.reduce
+    assert pol.collective == CollectiveSpec.parse(cfg.quant.collective)
     # ModelConfig and its QuantConfig describe the same plan
     assert ExecutionPolicy.from_config(cfg.quant) == pol
 
 
 def test_from_config_explicit_fields():
     qc = QuantConfig(scheme="exllama", backend="pallas",
-                     compute_dtype="bfloat16", reduce="psum_scatter",
-                     reduce_dtype="bfloat16")
+                     compute_dtype="bfloat16", collective="quant-int8:64")
     pol = ExecutionPolicy.from_config(qc)
     assert pol.backend == "pallas"
     assert pol.compute_dtype == jnp.dtype(jnp.bfloat16)
-    assert pol.reduce == "psum_scatter"
-    assert pol.reduce_dtype == jnp.dtype(jnp.bfloat16)
+    assert pol.collective == CollectiveSpec(name="quant-int8", block_size=64)
 
 
-def test_from_config_bad_dtype_errors():
+def test_from_config_bad_values_error():
     with pytest.raises(ValueError, match="unknown compute_dtype 'float64'"):
         ExecutionPolicy.from_config(QuantConfig(compute_dtype="float64"))
-    with pytest.raises(ValueError, match="unknown reduce_dtype"):
-        ExecutionPolicy.from_config(QuantConfig(reduce_dtype="bf16"))
+    with pytest.raises(ValueError, match="registered strategies"):
+        ExecutionPolicy.from_config(QuantConfig(collective="allgather"))
 
 
 def test_auto_heuristic():
@@ -82,14 +80,28 @@ def test_auto_heuristic():
 def test_policy_validates_and_hashes():
     with pytest.raises(ValueError, match="unknown scheme"):
         ExecutionPolicy(scheme="nope")
-    with pytest.raises(ValueError, match="unknown reduce"):
-        ExecutionPolicy(reduce="allgather")
+    with pytest.raises(ValueError, match="unknown collective"):
+        ExecutionPolicy(collective="allgather")
     # hashable + stable under dtype spelling (static-arg requirement)
     a = ExecutionPolicy(compute_dtype=jnp.float32)
     b = ExecutionPolicy(compute_dtype=np.float32)
     assert a == b and hash(a) == hash(b)
     assert hash(ExecutionPolicy().with_tiling(block_m=64)) != hash(
         ExecutionPolicy())
+    # string shorthands normalize to the same spec (hash-stable)
+    c = ExecutionPolicy(collective="cast:bfloat16")
+    d = ExecutionPolicy(collective=CollectiveSpec.parse("cast"))
+    assert c == d and hash(c) == hash(d)
+
+
+def test_policy_has_no_stringly_reduce_fields():
+    """The redesign's contract: the collective plan is a CollectiveSpec,
+    not loose strings."""
+    fields = {f.name for f in dataclasses.fields(ExecutionPolicy)}
+    assert "reduce" not in fields and "reduce_dtype" not in fields
+    assert isinstance(DEFAULT_POLICY.collective, CollectiveSpec)
+    qfields = {f.name for f in dataclasses.fields(QuantConfig)}
+    assert "reduce" not in qfields and "reduce_dtype" not in qfields
 
 
 # ---------------------------------------------------------------------------
@@ -144,83 +156,45 @@ def test_dispatch_extensible():
 
 
 # ---------------------------------------------------------------------------
-# policy path == legacy kwarg path
+# default policy == explicit spelling
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("scheme", reorder.SCHEMES)
 @pytest.mark.parametrize("gate", [True, False])
-def test_forward_default_policy_bit_exact_vs_legacy(scheme, gate):
+def test_forward_default_policy_is_explicit_policy(scheme, gate):
+    """Omitting the policy, DEFAULT_POLICY, and the fully-spelled-out
+    equivalent are bit-identical (the historical default plan)."""
     pp, x = _mk_pair(7, 128, 256, 128, 32, scheme, gate)
-    y_new = np.asarray(pp.forward(x, DEFAULT_POLICY, activation="silu"))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        y_legacy = np.asarray(schemes.pair_forward_reference(
-            x, pp, activation="silu", backend="jnp",
-            compute_dtype=jnp.float32))
-    np.testing.assert_array_equal(y_new, y_legacy)
-    # omitting the policy uses the same defaults
+    y_default = np.asarray(pp.forward(x, activation="silu"))
+    y_explicit = np.asarray(schemes.pair_forward_reference(
+        x, pp, ExecutionPolicy(scheme=scheme, backend="jnp",
+                               compute_dtype=jnp.float32,
+                               collective="psum"),
+        activation="silu"))
+    np.testing.assert_array_equal(y_default, y_explicit)
     np.testing.assert_array_equal(
-        np.asarray(pp.forward(x, activation="silu")), y_new)
-
-
-def test_legacy_kwargs_emit_deprecation_warning():
-    pp, x = _mk_pair(3, 64, 64, 32, 32, "tp-aware", gate=False)
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        schemes.pair_forward_reference(x, pp, backend="jnp")
-    with pytest.warns(DeprecationWarning, match="ExecutionPolicy"):
-        schemes.qmatmul(x, pp.up, compute_dtype=jnp.float32)
-
-
-def test_attention_fold_legacy_compute_dtype_warns():
-    from repro.core import attention_fold as af
-
-    rng = jax.random.PRNGKey(0)
-    r = jax.random.split(rng, 4)
-    h, kv, hd, d = 4, 2, 16, 32
-    pp = af.plan_attention_vo(
-        jax.random.normal(r[0], (d, kv * hd)),
-        jax.random.normal(r[1], (h * hd, d)),
-        n_heads=h, n_kv_heads=kv, head_dim=hd, group_size=hd, rng=rng)
-    x = jax.random.normal(r[2], (1, 4, d))
-    aw = jax.nn.softmax(jax.random.normal(r[3], (1, h, 4, 4)), axis=-1)
-    with pytest.warns(DeprecationWarning, match="attention_vo_reference"):
-        y_legacy = af.attention_vo_reference(
-            x, None, aw, pp, n_heads=h, n_kv_heads=kv, head_dim=hd,
-            compute_dtype=jnp.float32)
-    y_new = af.attention_vo_reference(
-        x, None, aw, pp, n_heads=h, n_kv_heads=kv, head_dim=hd)
-    np.testing.assert_array_equal(np.asarray(y_legacy), np.asarray(y_new))
-
-
-def test_policy_plus_legacy_kwargs_is_an_error():
-    pp, x = _mk_pair(3, 64, 64, 32, 32, "tp-aware", gate=False)
-    with pytest.raises(TypeError, match="not both"):
-        schemes.pair_forward_reference(x, pp, DEFAULT_POLICY,
-                                       backend="jnp")
-    with pytest.raises(TypeError, match="not both"):
-        resolve_policy(DEFAULT_POLICY, reduce="psum")
+        np.asarray(pp.forward(x, DEFAULT_POLICY, activation="silu")),
+        y_default)
+    assert resolve_policy(None) is DEFAULT_POLICY
+    assert resolve_policy(y_pol := ExecutionPolicy(backend="ref")) is y_pol
 
 
 # ---------------------------------------------------------------------------
 # context / engine plumbing
 # ---------------------------------------------------------------------------
 
-def test_parallel_context_policy_translation():
+def test_parallel_context_policy_threading():
     from repro.models.common import ParallelContext, REPLICATED
 
     assert REPLICATED.execution_policy == DEFAULT_POLICY
-    legacy = ParallelContext(mlp_reduce="psum_scatter",
-                             mlp_reduce_dtype=jnp.bfloat16)
-    pol = legacy.execution_policy
-    assert pol.reduce == "psum_scatter"
-    assert pol.reduce_dtype == jnp.dtype(jnp.bfloat16)
-    explicit = ParallelContext(policy=ExecutionPolicy(reduce="none"))
-    assert explicit.execution_policy.reduce == "none"
-    # mixing both spellings is ambiguous -> error, not a silent drop
-    mixed = ParallelContext(policy=ExecutionPolicy(),
-                            mlp_reduce="psum_scatter")
-    with pytest.raises(ValueError, match="both policy="):
-        mixed.execution_policy
+    explicit = ParallelContext(policy=ExecutionPolicy(collective="none"))
+    assert explicit.execution_policy.collective == CollectiveSpec("none")
+    quant = ParallelContext(policy=ExecutionPolicy(
+        collective="quant-int8"))
+    assert quant.execution_policy.collective.name == "quant-int8"
+    # the deprecated per-field spelling is gone for good
+    with pytest.raises(TypeError):
+        ParallelContext(mlp_reduce="psum_scatter")
 
 
 def test_engine_injects_policy_into_ctx():
@@ -273,3 +247,6 @@ def test_policy_replace_helpers():
     pol = DEFAULT_POLICY.with_(backend="ref").with_tiling(block_m=8)
     assert pol.backend == "ref" and pol.tiling.block_m == 8
     assert DEFAULT_POLICY.tiling.block_m == 128   # frozen originals
+    quant = DEFAULT_POLICY.with_(collective="quant-int8")
+    assert quant.collective == CollectiveSpec.parse("quant-int8")
+    assert DEFAULT_POLICY.collective == CollectiveSpec("psum")

@@ -14,6 +14,10 @@ ENTRY %main {
   %rs = f32[8,64]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={1}
   %cp = f32[4,16]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
   %aa = f32[2,8]{1,0} all-to-all(%v), replica_groups={{0,1}}
+  %aa2 = (s8[2,8]{1,0}, /*index=1*/f16[2,2]{1,0}) all-to-all(%q, %s), replica_groups={{0,1}}
+  %gte = s8[2,8]{1,0} get-tuple-element((s8[2,8]{1,0}, f16[2,2]{1,0}) %aa2), index=0
+  %ard = bf16[8,512]{1,0} all-reduce-done(%ar)
+  %ags = (f32[8,64]{1,0}, f32[8,64]{1,0}) all-gather-start(%p), replica_groups={{0,1}}
 }
 """
 
@@ -25,13 +29,18 @@ def test_parse_collective_bytes():
     rs = 8 * 64 * 4 * 7                         # (g-1) x result
     cp = 4 * 16 * 4
     aa = 2 * 8 * 4 * 1 / 2
+    aa2 = (2 * 8 * 1 + 2 * 2 * 2) * 1 / 2       # tuple form: sum of entries
+    # async tuple-form -start aliases its operand in the tuple, so it is
+    # deliberately NOT summed (would double-count); -done never counted
     assert out["all-gather"] == pytest.approx(ag)
-    assert out["all-reduce"] == pytest.approx(ar)
+    assert out["all-reduce"] == pytest.approx(ar)   # -done not re-counted
     assert out["reduce-scatter"] == pytest.approx(rs)
     assert out["collective-permute"] == pytest.approx(cp)
-    assert out["all-to-all"] == pytest.approx(aa)
-    assert out["total_per_device"] == pytest.approx(ag + ar + rs + cp + aa)
+    assert out["all-to-all"] == pytest.approx(aa + aa2)
+    assert out["total_per_device"] == pytest.approx(ag + ar + rs + cp
+                                                    + aa + aa2)
     assert out["counts"]["all-gather"] == 1
+    assert out["counts"]["all-to-all"] == 2
 
 
 def test_roofline_terms_and_bottleneck():

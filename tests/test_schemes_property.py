@@ -42,15 +42,16 @@ def test_scheme_equivalence_property(k1g, n1g, n2, gsp, scheme, gate):
     gate=st.booleans(), act=st.sampled_from(["silu", "gelu", None]),
 )
 @settings(max_examples=12, deadline=None)
-def test_forward_default_policy_matches_legacy_property(
+def test_forward_default_policy_matches_explicit_property(
         k1g, n1g, n2, gsp, scheme, gate, act):
     """``PlannedPair.forward`` under the default policy is bit-exactly the
-    legacy kwarg path, for any shape/scheme/activation draw."""
+    fully-spelled-out policy path, for any shape/scheme/activation draw."""
     gs = 2 ** gsp
     k1, n1 = k1g * gs, n1g * gs
     pp, x, _ = _mk_pair(k1g * 11 + n1g, k1, n1, n2, gs, scheme, gate)
     y_new = np.asarray(pp.forward(x, DEFAULT_POLICY, activation=act))
-    with pytest.warns(DeprecationWarning):
-        y_legacy = np.asarray(schemes.pair_forward_reference(
-            x, pp, activation=act, backend="jnp"))
-    np.testing.assert_array_equal(y_new, y_legacy)
+    y_explicit = np.asarray(schemes.pair_forward_reference(
+        x, pp, DEFAULT_POLICY.with_(scheme=scheme, backend="jnp",
+                                    collective="psum"),
+        activation=act))
+    np.testing.assert_array_equal(y_new, y_explicit)

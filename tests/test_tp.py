@@ -46,14 +46,15 @@ def test_tp_schemes_match_reference():
                     group_size_up=32, group_size_down=32, rng=rng)
                 ref = np.asarray(pp.forward(x, activation="silu"))
                 with mesh:
-                    for reduce in ("psum", "psum_scatter"):
-                        pol = ExecutionPolicy(scheme=scheme, reduce=reduce)
+                    for coll in ("psum", "psum_scatter"):
+                        pol = ExecutionPolicy(scheme=scheme,
+                                              collective=coll)
                         y = np.asarray(pp.forward(
                             x, pol, mesh, batch_axes=("data",),
                             activation="silu"))
                         err = np.abs(y - ref).max() / np.abs(ref).max()
-                        assert err < 1e-4, (tp, scheme, reduce, err)
-                        print("OK", tp, scheme, reduce)
+                        assert err < 1e-4, (tp, scheme, coll, err)
+                        print("OK", tp, scheme, coll)
     """)
     assert out.count("OK") == 18
 
