@@ -1,7 +1,17 @@
-"""Serve a quantized model with batched requests through the scheduler,
-with the TP-aware deployment scheme under an (data=2, model=4) host mesh.
+"""Serve a quantized model with batched requests through the scheduler —
+the prepare-once / serve-many lifecycle under a (data=2, model=4) host
+mesh.
+
+Step 1 (offline, once per deployment): the plan compiler quantizes,
+reorders/folds, and pre-shards the weights for the target TP degree,
+freezing a ``DeploymentArtifact`` directory.
+
+Step 2 (every server start): load + validate the artifact and serve.  No
+GPTQ, no ``plan_pair`` at startup — the manifest guarantees the plan
+matches the config, policy, and mesh.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py [--arch qwen3-4b]
+      (add --one-shot to compile in memory instead, the old flow)
 """
 
 import os
@@ -10,6 +20,7 @@ os.environ.setdefault("XLA_FLAGS",
 
 import argparse
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -20,9 +31,12 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core.policy import ExecutionPolicy
 from repro.models.common import ParallelContext
+from repro.plan import DeploymentArtifact, compiler
 from repro.runtime.sampling import SamplingConfig
 from repro.runtime.scheduler import Request, Scheduler
 from repro.runtime.serve import make_engine
+
+TP = 4
 
 
 def main():
@@ -32,9 +46,14 @@ def main():
     ap.add_argument("--collective", default="psum",
                     help="trailing collective spec (comm.dispatch registry "
                          "shorthand, e.g. psum, psum_scatter, "
-                         "cast:bfloat16, quant-int8)")
+                         "cast:bfloat16, quant-int8, quant-int4)")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--artifact", default=None,
+                    help="reuse an existing artifact dir (skips prepare)")
+    ap.add_argument("--one-shot", action="store_true",
+                    help="compile the plan in memory at startup instead "
+                         "of the prepare/serve two-step")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).with_quant(mode="mlp",
@@ -43,15 +62,33 @@ def main():
     # the deployment plan, derived once from the config and threaded
     # through the engine to every quantized GEMM
     policy = ExecutionPolicy.from_config(cfg)
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    artifact = None
+    if not args.one_shot:
+        # ---- step 1: prepare (offline compile; skipped when an artifact
+        # directory is supplied) --------------------------------------------
+        art_dir = args.artifact
+        if art_dir is None:
+            art_dir = os.path.join(tempfile.mkdtemp(prefix="repro_plan_"),
+                                   args.arch)
+            t0 = time.time()
+            compiler.prepare(cfg, tp=TP, seed=0, policy=policy,
+                             extra_manifest={"smoke": True}).save(art_dir)
+            print(f"prepared artifact in {time.time() - t0:.1f}s "
+                  f"-> {art_dir}")
+        # ---- step 2: load + validate (no quantization from here on) -------
+        artifact = DeploymentArtifact.load(art_dir)
+
+    mesh = jax.make_mesh((2, TP), ("data", "model"))
     ctx = ParallelContext(mesh=mesh, batch_axes=("data",), policy=policy)
     print(f"arch={args.arch} scheme={args.scheme} backend={policy.backend} "
           f"collective={policy.collective.shorthand()} "
-          f"mesh=2x4 (data x model)")
+          f"mesh=2x{TP} (data x model) "
+          f"{'one-shot compile' if args.one_shot else 'from artifact'}")
 
     with mesh:
         engine = make_engine(cfg, jax.random.PRNGKey(0), ctx=ctx,
-                             max_seq=48, policy=policy)
+                             max_seq=48, policy=policy, artifact=artifact)
         sched = Scheduler(engine, max_batch=4, prompt_budget=16,
                           scfg=SamplingConfig(temperature=0.7, top_k=40))
         rng = np.random.default_rng(0)
@@ -66,9 +103,11 @@ def main():
         done = sched.run()
     dt = time.time() - t0
     tokens = sum(len(r.output) for r in done.values())
+    mid = sum(1 for step, _ in sched.admissions if step > 0)
     for rid, r in sorted(done.items()):
         print(f"  req {rid}: prompt[{len(r.prompt):2d}] -> {r.output}")
-    print(f"\n{len(done)} requests, {tokens} new tokens, {dt:.1f}s "
+    print(f"\n{len(done)} requests ({mid} admitted mid-stream), "
+          f"{tokens} new tokens, {dt:.1f}s "
           f"({tokens / dt:.1f} tok/s on CPU interpret)")
 
 

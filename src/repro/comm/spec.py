@@ -15,7 +15,11 @@ and CLIs:
 * ``"psum"`` / ``"psum_scatter"`` / ``"none"`` — bit-exact strategies,
 * ``"cast"`` or ``"cast:<dtype>"`` — low-bit wire dtype (default bf16),
 * ``"quant-int8"`` or ``"quant-int8:<block>"`` — blockwise int8
-  quantized all-reduce (block size default 128).
+  quantized all-reduce (block size default 128),
+* ``"quant-int4"`` or ``"quant-int4:<block>"`` — blockwise int4: the
+  payload is packed 8-nibbles-per-uint32 with the same
+  ``quantization.pack_int4`` layout the weights use (block default 32 —
+  15 levels need tighter blocks than int8's 255).
 
 Strategy *implementations* live in ``comm/dispatch.py``; the spec only
 describes the plan.  ``spec.bytes_on_wire(shape, tp)`` resolves the
@@ -69,7 +73,7 @@ class CollectiveSpec:
     name: str = "psum"
     wire_dtype: Optional[Any] = None
     block_size: int = 128
-    bits: int = 8
+    bits: Optional[int] = None   # None -> the strategy's payload width
 
     def __post_init__(self):
         from repro.comm import dispatch  # deferred: dispatch imports spec
@@ -79,14 +83,23 @@ class CollectiveSpec:
                 f"{list(dispatch.strategies())}")
         if self.name == "cast" and self.wire_dtype is None:
             object.__setattr__(self, "wire_dtype", jnp.bfloat16)
+        if self.bits is None:
+            object.__setattr__(self, "bits",
+                               4 if self.name == "quant-int4" else 8)
         object.__setattr__(self, "wire_dtype",
                            _canon_wire_dtype(self.wire_dtype))
         if self.block_size <= 0:
             raise ValueError(f"block_size must be positive, "
                              f"got {self.block_size}")
-        if self.bits != 8:
+        if self.bits not in (4, 8):
             raise ValueError(
-                f"only 8-bit payloads are implemented, got bits={self.bits}")
+                f"only 4/8-bit payloads are implemented, got "
+                f"bits={self.bits}")
+        want_bits = {"quant-int8": 8, "quant-int4": 4}.get(self.name)
+        if want_bits is not None and self.bits != want_bits:
+            raise ValueError(
+                f"{self.name} carries {want_bits}-bit payloads, got "
+                f"bits={self.bits}")
 
     # ---- construction -----------------------------------------------------
 
@@ -107,6 +120,9 @@ class CollectiveSpec:
         if name == "quant-int8":
             return cls(name="quant-int8",
                        block_size=int(arg) if arg else 128)
+        if name == "quant-int4":
+            return cls(name="quant-int4", bits=4,
+                       block_size=int(arg) if arg else 32)
         if arg:
             raise ValueError(
                 f"collective {name!r} takes no ':' argument (got {value!r})")
@@ -116,8 +132,8 @@ class CollectiveSpec:
         """The string form ``parse`` round-trips (for CLIs / logs)."""
         if self.name == "cast":
             return f"cast:{jnp.dtype(self.wire_dtype).name}"
-        if self.name == "quant-int8":
-            return f"quant-int8:{self.block_size}"
+        if self.name in ("quant-int8", "quant-int4"):
+            return f"{self.name}:{self.block_size}"
         return self.name
 
     def with_(self, **kw) -> "CollectiveSpec":

@@ -180,9 +180,15 @@ def cholesky_hinv_upper(h: jax.Array, damp_frac: float = 0.01) -> jax.Array:
 # top-level quantizer
 # ---------------------------------------------------------------------------
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class QuantResult:
-    """Offline quantization artifact (the on-disk format + plan inputs)."""
+    """Offline quantization artifact (the on-disk format + plan inputs).
+
+    Registered as a pytree so the plan compiler's quantize stage can emit
+    it under ``vmap`` (stacked layers/experts) and hand it to the layout
+    stage as an intermediate ``PlanState`` value.
+    """
 
     naive: QuantizedLinear          # disk layout: original row order + g_idx
     ordered: QuantizedLinear        # Algorithm-1 layout: rows sorted by group

@@ -90,12 +90,30 @@ class PlannedPair:
         return self.down.n
 
 
-def plan_pair(
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PairBundle:
+    """Quantize-stage output for one GEMM pair — scheme-agnostic.
+
+    Holds every layout the quantizer emits (naive + ordered + perms, via
+    ``QuantResult``) so the *layout* stage can pick a deployment scheme
+    later without re-quantizing.  This is the intermediate value the plan
+    compiler (``plan/compiler.py``) threads between its quantize and
+    reorder/fold stages; ``plan_pair`` composes both stages for callers
+    that want a pair in one shot.
+    """
+
+    up: qz.QuantResult
+    gate: Optional[qz.QuantResult]
+    down: qz.QuantResult
+    share_p1: bool = dataclasses.field(metadata=dict(static=True))
+
+
+def quantize_pair(
     w_up: jax.Array,
     w_down: jax.Array,
     *,
     w_gate: Optional[jax.Array] = None,
-    scheme: str = "tp-aware",
     group_size_up: int = 128,
     group_size_down: int = 128,
     act_order: bool = True,
@@ -106,16 +124,14 @@ def plan_pair(
     hessian_down: Optional[jax.Array] = None,
     use_gptq: bool = False,
     share_p1: bool = True,
-) -> PlannedPair:
-    """Quantize + lay out a GEMM pair for the requested deployment scheme.
+) -> PairBundle:
+    """Compiler stage 1 for one pair: quantize, no layout decision yet.
 
     ``share_p1`` (beyond-paper): quantize the gate with the *up* matrix's
     processing order.  Importance is a property of the shared input
     channels, so one order serves both — the runtime then performs ONE
     ``X[:, P1]`` gather instead of two (see ``pair_forward_*``).
     """
-    if scheme not in SCHEMES:
-        raise ValueError(f"unknown scheme {scheme!r}, expected one of {SCHEMES}")
     k1, n1 = w_up.shape
     n1_d, n2 = w_down.shape
     if n1_d != n1:
@@ -141,6 +157,21 @@ def plan_pair(
                                  hessian=hessian_up, use_gptq=use_gptq,
                                  rng=rngs[2])
 
+    return PairBundle(up=q_up, gate=q_gate, down=q_down, share_p1=share_p1)
+
+
+def layout_pair(bundle: PairBundle, scheme: str = "tp-aware") -> PlannedPair:
+    """Compiler stage 2 for one pair: pick the deployment layout.
+
+    ``naive-actorder`` keeps the disk layout; ``exllama`` takes the
+    Algorithm-1 sorted rows; ``tp-aware`` additionally folds the down
+    projection's row sort P2 into the column-TP layer(s) offline
+    (Algorithm 3), eliminating the runtime AllGather/permute/chunk.
+    """
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}, expected one of {SCHEMES}")
+    q_up, q_gate, q_down = bundle.up, bundle.gate, bundle.down
+
     if scheme == "naive-actorder":
         return PlannedPair(
             up=q_up.naive, gate=(q_gate.naive if q_gate else None),
@@ -161,8 +192,44 @@ def plan_pair(
         up=up, gate=gate, down=q_down.ordered,
         p1_up=q_up.perm,
         # None marks "shares p1_up" — the runtime reuses the one gather
-        p1_gate=(None if (q_gate is None or share_p1) else q_gate.perm),
+        p1_gate=(None if (q_gate is None or bundle.share_p1)
+                 else q_gate.perm),
         p2=p2, scheme=scheme)
+
+
+def plan_pair(
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    w_gate: Optional[jax.Array] = None,
+    scheme: str = "tp-aware",
+    group_size_up: int = 128,
+    group_size_down: int = 128,
+    act_order: bool = True,
+    rng: Optional[jax.Array] = None,
+    importance_up: Optional[jax.Array] = None,
+    importance_down: Optional[jax.Array] = None,
+    hessian_up: Optional[jax.Array] = None,
+    hessian_down: Optional[jax.Array] = None,
+    use_gptq: bool = False,
+    share_p1: bool = True,
+) -> PlannedPair:
+    """Quantize + lay out a GEMM pair for the requested deployment scheme.
+
+    Composition of the two compiler stages (``quantize_pair`` then
+    ``layout_pair``) — the one-shot entry point for tests/benchmarks that
+    plan a single pair outside the full ``plan/compiler.py`` pipeline.
+    """
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}, expected one of {SCHEMES}")
+    bundle = quantize_pair(
+        w_up, w_down, w_gate=w_gate,
+        group_size_up=group_size_up, group_size_down=group_size_down,
+        act_order=act_order, rng=rng,
+        importance_up=importance_up, importance_down=importance_down,
+        hessian_up=hessian_up, hessian_down=hessian_down,
+        use_gptq=use_gptq, share_p1=share_p1)
+    return layout_pair(bundle, scheme)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,24 @@
 """Serving entrypoint: quantized deployment with the paper's schemes.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-      --scheme tp-aware --requests 8
+Two lifecycles:
+
+* one-shot (compile in memory at startup):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+        --scheme tp-aware --requests 8
+
+* prepare-once / serve-many (the paper's a-priori plan, made literal):
+
+    PYTHONPATH=src python -m repro.launch.serve prepare \
+        --arch qwen3-4b --smoke --scheme tp-aware --tp 2 --out /tmp/plan
+    PYTHONPATH=src python -m repro.launch.serve --artifact /tmp/plan \
+        --tp 2 --requests 8
+
+  ``prepare`` runs the offline plan compiler (quantize -> reorder/fold ->
+  TP pre-shard) and writes a ``DeploymentArtifact``; serving from it
+  never invokes GPTQ or the layout planner — the manifest is validated
+  against the reconstructed config/policy/mesh so a stale or mismatched
+  plan refuses to serve instead of silently computing the wrong thing.
 """
 
 from __future__ import annotations
@@ -32,8 +49,7 @@ def _collective(value: str) -> str:
     return value
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def _plan_args(ap: argparse.ArgumentParser):
     ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--scheme", default="tp-aware",
@@ -45,27 +61,101 @@ def main(argv=None):
                     help="row-TP epilogue collective spec; any strategy "
                          "registered in comm.dispatch: "
                          + ", ".join(comm_dispatch.strategies())
-                         + " (parameterized shorthands like cast:float16 "
-                           "or quant-int8:64 also accepted)")
+                         + " (parameterized shorthands like cast:float16, "
+                           "quant-int8:64 or quant-int4:32 also accepted)")
+    ap.add_argument("--seed", type=int, default=0)
+
+
+def _build_cfg(args):
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    # the whole deployment plan lives on the config; the policy below is
+    # derived from it and flows unchanged to the kernels
+    return cfg.with_quant(mode="mlp", scheme=args.scheme,
+                          backend=args.backend, collective=args.collective)
+
+
+def prepare(argv=None):
+    """Offline compile: write a ``DeploymentArtifact`` directory."""
+    from repro.plan import compiler
+
+    ap = argparse.ArgumentParser(prog="repro.launch.serve prepare")
+    _plan_args(ap)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="target model-axis degree the shards are pre-"
+                         "split for (serving must use the same)")
+    ap.add_argument("--out", required=True, help="artifact directory")
+    args = ap.parse_args(argv)
+
+    cfg = _build_cfg(args)
+    policy = ExecutionPolicy.from_config(cfg)
+    t0 = time.time()
+    art = compiler.prepare(cfg, tp=args.tp, seed=args.seed, policy=policy,
+                           extra_manifest={"smoke": bool(args.smoke)})
+    path = art.save(args.out)
+    dt = time.time() - t0
+    n_pairs = len(art.manifest["pairs"])
+    print(f"prepared {args.arch} (scheme={args.scheme} "
+          f"collective={policy.collective.shorthand()} tp={args.tp}) "
+          f"-> {path}: {n_pairs} planned pair(s), "
+          f"{len(art.manifest['leaf_shards'])} leaves, {dt:.1f}s")
+    return path
+
+
+def _load_artifact(args):
+    """Reconstruct (cfg, policy, artifact) from an artifact directory.
+
+    The manifest is the single source of truth for the plan: the CLI's
+    plan flags (--scheme/--backend/--collective/--arch) are ignored, and
+    --tp defaults to the artifact's degree (an explicit --tp > 1 that
+    disagrees fails ``validate``).  To serve a different plan, re-run
+    ``prepare``.
+    """
+    from repro.plan import DeploymentArtifact
+
+    art = DeploymentArtifact.load(args.artifact)
+    man = art.manifest
+    cfg = (get_smoke_config(man["arch_id"]) if man.get("smoke")
+           else get_config(man["arch_id"]))
+    cfg = cfg.with_quant(**man["quant"])
+    policy = art.policy()
+    tp = args.tp if args.tp > 1 else art.tp
+    art.validate(cfg=cfg, policy=policy, tp=tp)
+    return cfg, policy, art, tp
+
+
+def main(argv=None):
+    import sys
+
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "prepare":
+        return prepare(argv[1:])
+
+    ap = argparse.ArgumentParser()
+    _plan_args(ap)
+    ap.add_argument("--artifact", default=None,
+                    help="serve a prepared DeploymentArtifact directory "
+                         "(skips quantize/plan at startup; the manifest "
+                         "defines arch/scheme/backend/collective — plan "
+                         "flags are ignored — and is validated against "
+                         "the reconstructed config, policy, and mesh)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-budget", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=0.8)
-    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = (get_smoke_config(args.arch) if args.smoke
-           else get_config(args.arch))
-    # the whole deployment plan lives on the config; the policy below is
-    # derived from it and flows unchanged to the kernels
-    cfg = cfg.with_quant(mode="mlp", scheme=args.scheme,
-                         backend=args.backend, collective=args.collective)
-    policy = ExecutionPolicy.from_config(cfg)
+    if args.artifact:
+        cfg, policy, artifact, tp = _load_artifact(args)
+    else:
+        cfg = _build_cfg(args)
+        policy = ExecutionPolicy.from_config(cfg)
+        artifact, tp = None, args.tp
 
-    if args.tp > 1:
-        mesh = mesh_lib.make_host_mesh(model=args.tp)
+    if tp > 1:
+        mesh = mesh_lib.make_host_mesh(model=tp)
         ctx = ParallelContext(mesh=mesh, batch_axes=("data",),
                               policy=policy)
     else:
@@ -73,7 +163,7 @@ def main(argv=None):
 
     max_seq = args.prompt_budget + args.max_new + 1
     engine = make_engine(cfg, jax.random.PRNGKey(args.seed), ctx=ctx,
-                         max_seq=max_seq, policy=policy)
+                         max_seq=max_seq, policy=policy, artifact=artifact)
     sched = Scheduler(engine, max_batch=args.max_batch,
                       prompt_budget=args.prompt_budget,
                       scfg=SamplingConfig(temperature=args.temperature,
@@ -93,10 +183,11 @@ def main(argv=None):
     total_new = sum(len(r.output) for r in done.values())
     for rid, r in sorted(done.items()):
         print(f"req {rid}: prompt {len(r.prompt):3d} -> {r.output[:8]}...")
+    src = f"artifact={args.artifact}" if args.artifact else "in-memory plan"
     print(f"\n{len(done)} requests, {total_new} tokens in {dt:.1f}s "
-          f"({total_new / dt:.1f} tok/s) [scheme={args.scheme} "
+          f"({total_new / dt:.1f} tok/s) [scheme={policy.scheme} "
           f"backend={policy.backend} "
-          f"collective={policy.collective.shorthand()}]")
+          f"collective={policy.collective.shorthand()} {src}]")
 
 
 if __name__ == "__main__":

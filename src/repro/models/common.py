@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core import compat, reorder, schemes
+from repro.core import compat, schemes
 from repro.core.policy import DEFAULT_POLICY, ExecutionPolicy
 from repro.core.reorder import PlannedPair
 
@@ -394,13 +394,18 @@ def attention_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ParallelContext,
     """One-token decode with KV cache.
 
     x: (B, 1, d); cache: {"k","v": (B, C, KV, D)} where C = cache capacity
-    (full seq_len, or ``window`` for the ring-buffer variant); pos: scalar
-    current position.  Returns (out, new_cache).
+    (full seq_len, or ``window`` for the ring-buffer variant); pos: the
+    current position — a scalar (all requests in lockstep, the historical
+    path) or a (B,) vector of *per-slot* positions (continuous batching:
+    the scheduler admits a new request into a retired slot mid-stream, so
+    each slot runs its own clock).  Returns (out, new_cache).
     """
     b = x.shape[0]
     hd = cfg.head_dim
     kvh, _, h = head_grid(cfg)          # deployed (possibly padded) grid
     cap = cache["k"].shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1            # (B,) per-slot clocks
 
     q = (x @ p["wq"]).reshape(b, 1, h, hd)
     k = (x @ p["wk"]).reshape(b, 1, kvh, hd)
@@ -409,28 +414,38 @@ def attention_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ParallelContext,
         q = rms_head_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_head_norm(k, p["k_norm"], cfg.norm_eps)
     if cfg.use_rope:
-        posv = jnp.full((1,), pos, dtype=jnp.int32)
+        posv = pos[:, None] if per_slot else jnp.full((1,), pos, jnp.int32)
         q = rope(q, posv, cfg.rope_theta)
         k = rope(k, posv, cfg.rope_theta)
 
     slot = pos % cap if window is not None else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
+    if per_slot:
+        # per-slot scatter: each batch row writes its own cache position
+        ck = cache["k"].at[jnp.arange(b), slot].set(
+            k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[jnp.arange(b), slot].set(
+            v[:, 0].astype(cache["v"].dtype))
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
     # shard the cache along its (long) sequence dim over the model axis —
     # KV heads may be fewer than the axis size (GQA), sequence never is.
     ck = ctx.shard(ck, ctx.batch_spec, ctx.model_axis, None, None)
     cv = ctx.shard(cv, ctx.batch_spec, ctx.model_axis, None, None)
 
     j = jnp.arange(cap)
+    pb = pos[:, None] if per_slot else pos          # (B, 1) | scalar
     if window is not None:
         # ring buffer: once pos >= cap every slot holds one of the last
         # `cap` positions; before that only slots <= pos are valid.
-        valid = (j <= pos) | jnp.full((cap,), pos >= cap, dtype=bool)
+        valid = (j[None, :] <= pb) | jnp.broadcast_to(
+            jnp.asarray(pb >= cap), (pb.shape[0] if per_slot else 1, cap))
     else:
-        valid = j <= pos
-    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, cap))
+        valid = jnp.broadcast_to(j[None, :] <= pb,
+                                 (pb.shape[0] if per_slot else 1, cap))
+    mask = jnp.broadcast_to(valid[:, None, :], (b, 1, cap))
 
     q = ctx.shard(q, ctx.batch_spec, None, ctx.model_axis, None)
     out = _sdpa(cfg, ctx, q, ck.astype(x.dtype), cv.astype(x.dtype), mask)
@@ -455,31 +470,24 @@ def kv_cache_specs(cfg: ModelConfig, ctx: ParallelContext):
 # MLP — the paper's subject
 # ---------------------------------------------------------------------------
 
-def mlp_params(cfg: ModelConfig, rng, *, d_ff=None, quantize=None):
-    """One layer's MLP params: quantized PlannedPair or raw dense weights."""
+def mlp_params(cfg: ModelConfig, rng, *, d_ff=None):
+    """One layer's raw (dense fp) MLP params.
+
+    Model init always emits raw weights now — quantization and layout
+    planning happen in ONE place, the offline plan compiler
+    (``plan/compiler.py``), which ``registry.Model.init`` runs in memory
+    when ``cfg.quant.mode == "mlp"`` (and which ``prepare`` runs ahead of
+    time into a ``DeploymentArtifact``).  The 4-way rng split is kept so
+    dense weights stay bit-identical to the historical init stream.
+    """
     d = cfg.d_model
     ff = d_ff or cfg.d_ff
-    quantize = cfg.quant.mode == "mlp" if quantize is None else quantize
     r = split_rngs(rng, ["up", "gate", "down", "plan"])
-    w_up = dense_init(r["up"], (d, ff))
-    w_down = dense_init(r["down"], (ff, d))
-    w_gate = dense_init(r["gate"], (d, ff)) if cfg.mlp_gated else None
-    if not quantize:
-        p = {"w_up": w_up, "w_down": w_down}
-        if w_gate is not None:
-            p["w_gate"] = w_gate
-        return p
-    from repro.core.quantization import choose_group_size
-    # the row-TP layer's K (= ff) shards over up to tp_groups ranks; pick a
-    # group size that tiles each shard exactly (paper Sec 2.1 deployment
-    # assumption: quantize once, deploy at any TP)
-    ff_shard = ff // cfg.quant.tp_groups if ff % cfg.quant.tp_groups == 0 \
-        else ff
-    return reorder.plan_pair(
-        w_up, w_down, w_gate=w_gate, scheme=cfg.quant.scheme,
-        group_size_up=choose_group_size(d, cfg.quant.group_size),
-        group_size_down=choose_group_size(ff_shard, cfg.quant.group_size),
-        act_order=cfg.quant.act_order, rng=r["plan"])
+    p = {"w_up": dense_init(r["up"], (d, ff)),
+         "w_down": dense_init(r["down"], (ff, d))}
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(r["gate"], (d, ff))
+    return p
 
 
 def mlp_specs(cfg: ModelConfig, params_like, axis="model", stacked=True,

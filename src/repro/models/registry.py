@@ -49,6 +49,23 @@ class Model:
     module: Any
 
     def init(self, rng) -> Any:
+        """Raw fp init, then — for quantized configs — the in-memory plan
+        compile (quantize + reorder/fold stages).  ``Model.init`` is
+        therefore bit-exact with loading a ``DeploymentArtifact``
+        ``prepare``d from the same seed: both run the identical
+        ``plan/compiler.py`` pipeline on the identical raw stream."""
+        raw = self.init_raw(rng)
+        if self.cfg.quant.mode != "mlp":
+            return raw
+        from repro.plan import compiler  # lazy: compiler imports registry
+
+        return compiler.compile_params(
+            self.cfg, raw,
+            rng=jax.random.fold_in(rng, compiler.PLAN_RNG_STREAM))
+
+    def init_raw(self, rng) -> Any:
+        """The family module's raw fp params (no quantization) — the plan
+        compiler's input."""
         return self.module.init_params(self.cfg, rng)
 
     def param_specs(self, params, ctx: ParallelContext):

@@ -1,0 +1,17 @@
+"""Offline plan compiler: quantize -> reorder/fold -> TP pre-shard.
+
+The paper's deployment plan is known *a priori*; this package is the
+offline half that makes it so in the repo — one staged pipeline from
+``(ModelConfig, ExecutionPolicy, raw fp params)`` to a frozen, serialized
+``DeploymentArtifact`` that the serving stack loads without touching
+GPTQ or the layout planner again (prepare once, serve many).
+"""
+
+from repro.plan.artifact import DeploymentArtifact, PlanMismatchError
+from repro.plan.compiler import (PlanState, compile_params, compile_plan,
+                                 run_stages)
+
+__all__ = [
+    "DeploymentArtifact", "PlanMismatchError", "PlanState",
+    "compile_params", "compile_plan", "run_stages",
+]

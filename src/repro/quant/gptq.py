@@ -1,10 +1,11 @@
-"""Offline model-quantization pipeline.
+"""Offline model-quantization entry point for *trained* dense params.
 
-Walks a dense param pytree and replaces every MLP weight dict
-(``{"w_up", "w_down"[, "w_gate"]}``) with a deployment-ready
-``PlannedPair`` in the requested scheme — handling arbitrarily stacked
-leading dims (L for dense layers, (L, E) for MoE experts, (ns, nself) for
-the VLM's inner self-attention stacks) by nested vmap.
+``quantize_model`` is a thin wrapper over the plan compiler's quantize +
+layout stages (``plan/compiler.py``) — the ONE pipeline that also backs
+``Model.init`` and ``prepare`` — so a trained checkpoint and a random
+init take the identical path from dense weights to deployment-ready
+``PlannedPair``s (arbitrarily stacked leading dims: L for dense layers,
+(L, E) for MoE experts, the VLM's inner self-attention stacks).
 
 act_order emulation follows the paper exactly (Eq. 2: "we use a random
 permutation function φ to emulate an arbitrary reordering"); callers doing
@@ -14,58 +15,12 @@ real calibration pass per-pair Hessians to ``reorder.plan_pair`` directly
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import reorder
-from repro.core.quantization import choose_group_size
-
-
-def _is_mlp_dict(node: Any) -> bool:
-    return (isinstance(node, dict) and "w_up" in node and "w_down" in node)
-
-
-def _plan_stacked(node: dict, *, scheme: str, group_size: int,
-                  act_order: bool, rng) -> Any:
-    """plan_pair vmapped over the stacked leading dims of the weights."""
-    w_up, w_down = node["w_up"], node["w_down"]
-    w_gate = node.get("w_gate")
-    lead = w_up.ndim - 2
-
-    gs_up = choose_group_size(w_up.shape[-2], group_size)
-    gs_down = choose_group_size(w_down.shape[-2], group_size)
-
-    def plan_one(*args):
-        if w_gate is None:
-            wu, wd, r = args
-            wg = None
-        else:
-            wu, wd, wg, r = args
-        return reorder.plan_pair(
-            wu, wd, w_gate=wg, scheme=scheme,
-            group_size_up=gs_up, group_size_down=gs_down,
-            act_order=act_order, rng=r)
-
-    if lead == 0:
-        args = (w_up, w_down, rng) if w_gate is None else (
-            w_up, w_down, w_gate, rng)
-        return plan_one(*args)
-
-    nstack = 1
-    for d in w_up.shape[:lead]:
-        nstack *= d
-    rngs = jax.random.split(rng, nstack).reshape(*w_up.shape[:lead], 2)
-
-    f = plan_one
-    for _ in range(lead):
-        f = jax.vmap(f)
-    args = (w_up, w_down, rngs) if w_gate is None else (
-        w_up, w_down, w_gate, rngs)
-    return f(*args)
+from repro.plan import compiler
 
 
 def quantize_model(cfg: ModelConfig, params: Any, *,
@@ -78,23 +33,19 @@ def quantize_model(cfg: ModelConfig, params: Any, *,
     Defaults come from ``cfg.quant``.  Non-MLP weights (attention,
     embeddings, norms, recurrences) stay dense — matching the paper's scope
     (the technique applies to the MLP column-TP/row-TP pair; attention
-    folding is the beyond-paper extension in ``core/attention_fold.py``).
+    folding is the beyond-paper extension in ``core/attention_fold.py``,
+    compiled by the ``stage_fold_attention`` pipeline stage).
     """
-    scheme = scheme or cfg.quant.scheme
-    group_size = group_size or cfg.quant.group_size
-    act_order = cfg.quant.act_order if act_order is None else act_order
-    rng = rng if rng is not None else jax.random.PRNGKey(0)
-
-    counter = [0]
-
-    def walk(node):
-        if _is_mlp_dict(node):
-            counter[0] += 1
-            sub = jax.random.fold_in(rng, counter[0])
-            return _plan_stacked(node, scheme=scheme, group_size=group_size,
-                                 act_order=act_order, rng=sub)
-        if isinstance(node, dict):
-            return {k: walk(v) for k, v in node.items()}
-        return node
-
-    return walk(params)
+    qcfg = cfg
+    overrides = {}
+    if scheme is not None:
+        overrides["scheme"] = scheme
+    if group_size is not None:
+        overrides["group_size"] = group_size
+    if act_order is not None:
+        overrides["act_order"] = act_order
+    if overrides:
+        qcfg = cfg.with_quant(**overrides)
+    return compiler.compile_params(
+        qcfg, params,
+        rng=rng if rng is not None else jax.random.PRNGKey(0))

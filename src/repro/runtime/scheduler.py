@@ -5,6 +5,20 @@ the scheduler packs up to ``max_batch`` of them into one fixed-shape
 (B, S) program, right-padding prompts, tracking per-slot progress, and
 retiring finished slots so new requests can be admitted between decode
 steps.  One compiled executable serves all traffic (shapes never change).
+
+Two drain modes:
+
+* **continuous** (token-granularity, the default wherever the family
+  supports per-slot position vectors): one persistent decode program
+  steps all ``max_batch`` slots together, each slot running its own
+  clock.  A slot that finishes is refilled from the queue at the next
+  step boundary — prompt replay and generation are the same decode loop,
+  so admission never stalls the other slots.  Numerics per request are
+  bit-identical to running it alone (the causal mask hides every other
+  slot's cache rows).
+* **batch-drain** (legacy fallback, audio/vlm): popleft up to
+  ``max_batch`` requests, run them to completion via ``Engine.generate``
+  (those families need the batch-global cross-attention prefill).
 """
 
 from __future__ import annotations
@@ -30,6 +44,16 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class _Slot:
+    """One live lane of the fixed-shape decode program."""
+
+    req: Request
+    fed: int = 0                   # tokens fed so far == this slot's pos
+    last: int = 0                  # last sampled token (next input when
+                                   # the prompt is exhausted)
+
+
 class Scheduler:
     def __init__(self, engine: Engine, *, max_batch: int = 8,
                  prompt_budget: int = 128,
@@ -42,15 +66,24 @@ class Scheduler:
         self.queue: deque[Request] = deque()
         self.finished: dict[int, Request] = {}
         self.rng = jax.random.PRNGKey(seed)
+        #: (step, rid) log of admissions — step > 0 entries are requests
+        #: admitted into retired slots *between* decode steps.
+        self.admissions: list[tuple[int, int]] = []
 
     def submit(self, req: Request):
         if req.prompt.size > self.prompt_budget:
             raise ValueError(
                 f"prompt {req.prompt.size} > budget {self.prompt_budget}")
+        if req.prompt.size + req.max_new_tokens > self.engine.max_seq:
+            raise ValueError(
+                f"prompt {req.prompt.size} + max_new {req.max_new_tokens} "
+                f"> engine max_seq {self.engine.max_seq}")
         self.queue.append(req)
 
     def run(self) -> dict[int, Request]:
         """Drain the queue; returns {rid: finished request}."""
+        if self.engine.supports_continuous:
+            return self._run_continuous()
         while self.queue:
             batch = [self.queue.popleft()
                      for _ in range(min(self.max_batch, len(self.queue)))]
@@ -58,6 +91,59 @@ class Scheduler:
         return self.finished
 
     # ------------------------------------------------------------------
+    # continuous mode: admit into retired slots between decode steps
+    # ------------------------------------------------------------------
+
+    def _run_continuous(self) -> dict[int, Request]:
+        b = self.max_batch
+        cache = self.engine.init_cache(b)
+        slots: list[Optional[_Slot]] = [None] * b
+        decode = self.engine._decode
+        params = self.engine.params
+        step = 0
+
+        while self.queue or any(slots):
+            # admission: every retired (or never-used) slot takes the next
+            # queued request NOW — between decode steps, not after a wave.
+            for i in range(b):
+                if slots[i] is None and self.queue:
+                    slots[i] = _Slot(req=self.queue.popleft())
+                    self.admissions.append((step, slots[i].req.rid))
+
+            tokens = np.zeros((b,), np.int32)
+            pos = np.zeros((b,), np.int32)
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                plen = s.req.prompt.size
+                tokens[i] = (s.req.prompt[s.fed] if s.fed < plen else s.last)
+                pos[i] = s.fed
+
+            logits, cache = decode(params, cache, jnp.asarray(tokens),
+                                   jnp.asarray(pos))
+            self.rng, sub = jax.random.split(self.rng)
+            sampled = np.asarray(sampling.sample(sub, logits, self.scfg))
+
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                s.fed += 1
+                if s.fed >= s.req.prompt.size:
+                    # this step consumed the prompt's last token (or a
+                    # generated one): its logits yield the next token
+                    s.last = int(sampled[i])
+                    s.req.output.append(s.last)
+                    if len(s.req.output) >= s.req.max_new_tokens:
+                        s.req.done = True
+                        self.finished[s.req.rid] = s.req
+                        slots[i] = None      # retired: refill next step
+            step += 1
+        return self.finished
+
+    # ------------------------------------------------------------------
+    # legacy batch-drain mode (families needing batch-global prefill)
+    # ------------------------------------------------------------------
+
     def _run_batch(self, batch: list[Request]):
         b = len(batch)
         s = self.prompt_budget

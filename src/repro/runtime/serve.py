@@ -64,6 +64,20 @@ class Engine:
         self._decode = jax.jit(decode, donate_argnums=1)
 
     # ------------------------------------------------------------------
+    @property
+    def supports_continuous(self) -> bool:
+        """True when the scheduler may run this model at token granularity
+        with per-slot position vectors (continuous batching).
+
+        Only families whose ENTIRE decode state is the position-masked KV
+        cache qualify: a reused slot's stale cache rows are hidden by the
+        ``j <= pos`` mask, so admission is bit-exact.  audio/vlm need the
+        batch-global cross-attention prefill (frames/patches); ssm/hybrid
+        carry per-lane *recurrent* state (rwkv6 wkv/shift, rglru conv/lru)
+        that no mask resets, so a refilled slot would inherit the previous
+        occupant's state — they fall back to batch-drain scheduling."""
+        return self.model.cfg.family in ("dense", "moe")
+
     def init_cache(self, batch: int):
         cache = self.model.init_cache(batch, self.max_seq,
                                       window=self.window)
@@ -143,8 +157,32 @@ class Engine:
 
 def make_engine(cfg, rng=None, *, ctx: ParallelContext = REPLICATED,
                 max_seq: int = 2048, window=None,
-                policy: Optional[ExecutionPolicy] = None) -> Engine:
+                policy: Optional[ExecutionPolicy] = None,
+                artifact=None) -> Engine:
+    """Build a serving engine.
+
+    ``artifact``: a ``DeploymentArtifact`` (or its directory path) from
+    ``plan`` / ``launch.serve prepare``.  The engine then serves the
+    precompiled plan — no GPTQ, no layout planning at load time — after
+    validating the artifact's manifest against ``cfg``, the effective
+    policy, and the mesh's model-axis degree (a mismatched plan raises
+    ``PlanMismatchError`` instead of silently serving).  Without an
+    artifact, ``Model.init`` runs the identical compiler in memory.
+    """
     model = build_model(cfg)
-    params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
+    if artifact is not None:
+        from repro.plan import DeploymentArtifact
+
+        if isinstance(artifact, (str, bytes)):
+            artifact = DeploymentArtifact.load(artifact)
+        eff_policy = policy
+        if eff_policy is None:
+            eff_policy = (ctx.policy if ctx.policy is not None
+                          else ExecutionPolicy.from_config(cfg))
+        tp = ctx.axis_size(ctx.model_axis) if ctx.mesh is not None else 1
+        artifact.validate(cfg=cfg, policy=eff_policy, tp=tp)
+        params = artifact.params()
+    else:
+        params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
     return Engine(model=model, params=params, ctx=ctx, max_seq=max_seq,
                   window=window, policy=policy)

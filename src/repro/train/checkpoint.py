@@ -1,12 +1,21 @@
 """npz-based checkpointing (no orbax dependency).
 
-Pytrees are flattened to ``path/sep/arated/keys`` -> arrays.  Static
-dataclass fields (QuantizedLinear.kind etc.) are reconstructed from the
-template pytree on restore, so quantized deployment plans round-trip.
+Pytrees are flattened to ``path/sep/arated/keys`` -> arrays.  Two restore
+paths:
+
+* ``restore(path, template)`` — rebuild into the structure of a template
+  pytree (shapes must match); the historical training-loop path.
+* ``load(path)`` — template-free: ``save`` embeds a JSON schema of the
+  tree (dict nesting, ``PlannedPair``/``QuantizedLinear`` static fields,
+  ``None`` markers) under the reserved ``__tree__`` key, so quantized
+  deployment plans — packed uint32 weights, perms, scales, and the static
+  scheme/group_size/kind fields — round-trip without re-running any
+  quantization.  This is what ``plan/artifact.py`` serves from.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import re
 from typing import Any
@@ -16,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 _SEP = "||"
+_TREE_KEY = "__tree__"
+_SCHEMA_VERSION = 1
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -23,6 +34,16 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(_path_str(p) for p in path)
         flat[key] = np.asarray(leaf)
+    return flat
+
+
+def flatten_keys(tree: Any) -> dict[str, Any]:
+    """Public ``{checkpoint key: leaf}`` view of a pytree (leaves NOT
+    converted to numpy) — the key naming ``save``/``load`` use, so callers
+    (the plan artifact's shard manifest) can address leaves stably."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_SEP.join(_path_str(p) for p in path)] = leaf
     return flat
 
 
@@ -36,6 +57,68 @@ def _path_str(p) -> str:
     return str(p)
 
 
+# ---------------------------------------------------------------------------
+# tree schema (template-free load)
+# ---------------------------------------------------------------------------
+
+def _schema(node: Any) -> dict:
+    """JSON-serializable structure descriptor for the trees this repo
+    checkpoints: nested dicts, the quantized-plan dataclasses, arrays."""
+    from repro.core.quantization import QuantizedLinear
+    from repro.core.reorder import PlannedPair
+
+    if node is None:
+        return {"t": "none"}
+    if isinstance(node, QuantizedLinear):
+        return {"t": "qlinear", "group_size": int(node.group_size),
+                "kind": node.kind,
+                "fields": {f: _schema(getattr(node, f))
+                           for f in ("qweight", "scales", "zeros", "g_idx")}}
+    if isinstance(node, PlannedPair):
+        return {"t": "pair", "scheme": node.scheme,
+                "fields": {f: _schema(getattr(node, f))
+                           for f in ("up", "gate", "down", "p1_up",
+                                     "p1_gate", "p2")}}
+    if isinstance(node, dict):
+        return {"t": "dict", "keys": {str(k): _schema(v)
+                                      for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        return {"t": "list" if isinstance(node, list) else "tuple",
+                "items": [_schema(v) for v in node]}
+    arr = np.asarray(node)
+    return {"t": "array", "dtype": str(arr.dtype), "shape": list(arr.shape)}
+
+
+def _from_schema(schema: dict, leaves: dict[str, np.ndarray],
+                 prefix: tuple[str, ...] = ()) -> Any:
+    from repro.core.quantization import QuantizedLinear
+    from repro.core.reorder import PlannedPair
+
+    t = schema["t"]
+    if t == "none":
+        return None
+    if t == "qlinear":
+        f = {k: _from_schema(v, leaves, prefix + (k,))
+             for k, v in schema["fields"].items()}
+        return QuantizedLinear(group_size=schema["group_size"],
+                               kind=schema["kind"], **f)
+    if t == "pair":
+        f = {k: _from_schema(v, leaves, prefix + (k,))
+             for k, v in schema["fields"].items()}
+        return PlannedPair(scheme=schema["scheme"], **f)
+    if t == "dict":
+        return {k: _from_schema(v, leaves, prefix + (k,))
+                for k, v in schema["keys"].items()}
+    if t in ("list", "tuple"):
+        items = [_from_schema(v, leaves, prefix + (str(i),))
+                 for i, v in enumerate(schema["items"])]
+        return items if t == "list" else tuple(items)
+    key = _SEP.join(prefix)
+    if key not in leaves:
+        raise KeyError(f"checkpoint missing leaf {key}")
+    return jnp.asarray(leaves[key], dtype=schema["dtype"])
+
+
 def save(path: str, tree: Any, *, step: int | None = None) -> str:
     """Save pytree to ``path`` (.npz).  Returns the file written."""
     if step is not None:
@@ -44,8 +127,31 @@ def save(path: str, tree: Any, *, step: int | None = None) -> str:
     if not path.endswith(".npz"):
         path += ".npz"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    flat = _flatten(tree)
+    if _TREE_KEY in flat:
+        raise ValueError(f"pytree key collides with reserved {_TREE_KEY!r}")
+    meta = json.dumps({"version": _SCHEMA_VERSION, "tree": _schema(tree)})
+    np.savez(path, **flat, **{_TREE_KEY: np.asarray(meta)})
     return path
+
+
+def load(path: str) -> Any:
+    """Template-free restore: rebuild the exact saved pytree — including
+    quantized-plan statics (scheme / group_size / kind) — from the schema
+    ``save`` embedded.  Raises on checkpoints written before the schema
+    existed (use ``restore`` with a template for those)."""
+    with np.load(path) as data:
+        if _TREE_KEY not in data:
+            raise ValueError(
+                f"checkpoint {path} has no embedded tree schema; "
+                "restore(path, template) is required for legacy files")
+        meta = json.loads(str(data[_TREE_KEY][()]))
+        if meta["version"] != _SCHEMA_VERSION:
+            raise ValueError(
+                f"checkpoint {path} schema v{meta['version']} != "
+                f"supported v{_SCHEMA_VERSION}")
+        leaves = {k: data[k] for k in data.files if k != _TREE_KEY}
+    return _from_schema(meta["tree"], leaves)
 
 
 def restore(path: str, template: Any) -> Any:

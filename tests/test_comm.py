@@ -45,7 +45,7 @@ def _run(script: str, devices: int = 8):
 
 def test_registry_seed_strategies():
     assert dispatch.strategies() == (
-        "cast", "none", "psum", "psum_scatter", "quant-int8")
+        "cast", "none", "psum", "psum_scatter", "quant-int4", "quant-int8")
 
 
 @pytest.mark.parametrize("name", dispatch.strategies())
@@ -67,6 +67,10 @@ def test_parse_shorthands():
         jnp.dtype(jnp.float16)
     q = CollectiveSpec.parse("quant-int8:64")
     assert (q.name, q.block_size, q.bits) == ("quant-int8", 64, 8)
+    q4 = CollectiveSpec.parse("quant-int4")
+    assert (q4.name, q4.block_size, q4.bits) == ("quant-int4", 32, 4)
+    assert CollectiveSpec.parse("quant-int4:16").block_size == 16
+    assert CollectiveSpec(name="quant-int4").bits == 4
     with pytest.raises(ValueError, match="takes no ':' argument"):
         CollectiveSpec.parse("psum:4")
     with pytest.raises(TypeError, match="string shorthand"):
@@ -85,6 +89,8 @@ def test_spec_validates_params():
         CollectiveSpec(name="quant-int8", block_size=0)
     with pytest.raises(ValueError, match="8-bit"):
         CollectiveSpec(name="quant-int8", bits=4)
+    with pytest.raises(ValueError, match="4-bit"):
+        CollectiveSpec(name="quant-int4", bits=8)
     with pytest.raises(ValueError, match="unknown wire dtype"):
         CollectiveSpec.parse("cast:fp16")
     # hashable (lives inside the jit-static ExecutionPolicy)
@@ -130,6 +136,19 @@ def test_quant_int8_bytes_quarter_of_psum_at_tp8():
     assert quant / psum <= 0.26
     # the non-tiling fallback is honestly more expensive, never free
     odd = CollectiveSpec.parse("quant-int8").bytes_on_wire((8, 8193), tp)
+    assert odd > quant
+
+
+def test_quant_int4_bytes_eighth_of_psum_at_tp8():
+    """Nibble-packed payloads + f16 (scale, zero) pairs land at
+    ~(0.5 + 4/block)/4 of the f32 psum bytes (~15.6% at block 32)."""
+    shape, tp = (8, 8192), 8
+    psum = CollectiveSpec(name="psum").bytes_on_wire(shape, tp)
+    quant = CollectiveSpec.parse("quant-int4").bytes_on_wire(shape, tp)
+    assert quant / psum == pytest.approx((0.5 + 4 / 32) / 4)
+    assert quant < CollectiveSpec.parse("quant-int8").bytes_on_wire(shape, tp)
+    # non-tiling output dims fall back to one-phase with nibble padding
+    odd = CollectiveSpec.parse("quant-int4").bytes_on_wire((8, 8193), tp)
     assert odd > quant
 
 
@@ -188,6 +207,11 @@ def test_collectives_vs_lax_primitives_under_shard_map():
             lossy[short] = (spec, TP * float(jnp.finfo(spec.wire_dtype).eps))
         qspec = CollectiveSpec.parse("quant-int8")
         lossy["quant-int8"] = (qspec, (TP + 1) * 2.0 ** (1 - qspec.bits))
+        q4 = CollectiveSpec.parse("quant-int4")
+        # asymmetric int4: one step is (max-min)/15 of the block range,
+        # paid once per rank contribution plus once for the re-quantized
+        # reduction
+        lossy["quant-int4"] = (q4, (TP + 1) * 2.0 / 15.0)
         for short, (spec, t) in lossy.items():
             err = np.abs(close(spec, None) - ref).max() / scale
             assert err < t, (short, err, t)
@@ -198,7 +222,7 @@ def test_collectives_vs_lax_primitives_under_shard_map():
         np.testing.assert_array_equal(part, np.asarray(y[0]))
         print("OK none-passthrough")
     """)
-    assert out.count("OK") == 6
+    assert out.count("OK") == 7
 
 
 def test_quant_int8_non_tiling_fallback_and_pair_forward():
@@ -235,7 +259,7 @@ def test_quant_int8_non_tiling_fallback_and_pair_forward():
         x = jax.random.normal(r[3], (m, k1))
         ref = np.asarray(pp.forward(x, activation="silu"))
         tol = {"psum": 1e-5, "psum_scatter": 1e-5, "cast": 2e-2,
-               "quant-int8": 5e-2}
+               "quant-int8": 5e-2, "quant-int4": 2e-1}
         with mesh:
             for short, t in tol.items():
                 pol = ExecutionPolicy(collective=short)
@@ -245,4 +269,37 @@ def test_quant_int8_non_tiling_fallback_and_pair_forward():
                 assert err < t, (short, err)
                 print("OK pair", short, f"{err:.1e}")
     """)
-    assert out.count("OK") == 5
+    assert out.count("OK") == 6
+
+
+def test_quant_int4_packs_like_the_weights():
+    """The int4 collective's wire payload reuses the weight quantizer's
+    nibble packing (``pack_int4``): pack->unpack along the last dim is the
+    identity, and a non-tiling dim survives the padded fallback."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.comm import CollectiveSpec, dispatch
+        from repro.comm.dispatch import _pack4_last, _unpack4_last
+        from repro.core import compat
+
+        q = jax.random.randint(jax.random.PRNGKey(0), (3, 5, 64), 0, 16)
+        packed = _pack4_last(q)
+        assert packed.shape == (3, 5, 8) and packed.dtype == jnp.uint32
+        np.testing.assert_array_equal(np.asarray(_unpack4_last(packed)),
+                                      np.asarray(q))
+        print("OK pack-roundtrip")
+
+        mesh = jax.make_mesh((8,), ("model",))
+        y = jax.random.normal(jax.random.PRNGKey(1), (8, 4, 130))
+        ref = np.asarray(jnp.sum(y, axis=0))
+        got = compat.shard_map(
+            lambda v: dispatch.apply(
+                v, "model", CollectiveSpec.parse("quant-int4"), None),
+            mesh=mesh, in_specs=P("model"),
+            out_specs=P(None, None, None))(y)
+        err = np.abs(np.asarray(got) - ref).max() / np.abs(ref).max()
+        assert err < 8 * 2.0 / 15.0, err     # one quant round per rank
+        print("OK int4-fallback", f"{err:.1e}")
+    """)
+    assert out.count("OK") == 2

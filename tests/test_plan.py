@@ -1,0 +1,257 @@
+"""Plan compiler + DeploymentArtifact: the prepare-once/serve-many path.
+
+Acceptance criteria of the PlanCompiler refactor:
+
+* ``prepare`` (compile_plan -> save) then serve-from-artifact runs WITHOUT
+  invoking GPTQ quantization or the layout planner at load time, and its
+  logits are bit-identical to the in-memory path for the same
+  config/policy/seed,
+* checkpoint round-trip of quantized pytrees: ``save`` -> ``load`` ->
+  bit-identical ``PlannedPair.forward`` outputs, statics preserved,
+* manifest-mismatch rejection: wrong TP degree / policy / config hash.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.policy import ExecutionPolicy
+from repro.core.reorder import PlannedPair
+from repro.models.common import REPLICATED
+from repro.models.registry import build_model
+from repro.plan import (DeploymentArtifact, PlanMismatchError, compiler)
+from repro.train import checkpoint
+
+
+def _smoke_cfg(arch="qwen3-4b"):
+    return get_smoke_config(arch)
+
+
+def _prepare(cfg, tp=2, seed=0):
+    """The exact pipeline ``launch.serve prepare`` runs."""
+    return compiler.prepare(cfg, tp=tp, seed=seed,
+                            extra_manifest={"smoke": True})
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip of quantized pytrees
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_quantized_roundtrip(tmp_path):
+    """save -> template-free load -> bit-identical PlannedPair.forward,
+    statics (scheme / group_size / kind) included."""
+    from repro.core import reorder
+
+    rng = jax.random.PRNGKey(0)
+    r = jax.random.split(rng, 3)
+    pp = reorder.plan_pair(
+        jax.random.normal(r[0], (64, 128)),
+        jax.random.normal(r[1], (128, 64)),
+        w_gate=jax.random.normal(r[2], (64, 128)),
+        scheme="tp-aware", group_size_up=32, group_size_down=32, rng=rng)
+    tree = {"layers": {"mlp": pp}, "scale": jnp.ones((4,))}
+    path = checkpoint.save(str(tmp_path / "plan"), tree)
+    loaded = checkpoint.load(path)
+
+    lpp = loaded["layers"]["mlp"]
+    assert isinstance(lpp, PlannedPair)
+    assert lpp.scheme == "tp-aware"
+    assert lpp.up.kind == "ordered" and lpp.up.group_size == 32
+    assert lpp.up.qweight.dtype == jnp.uint32
+    _assert_trees_equal(tree, loaded)
+
+    x = jax.random.normal(r[0], (4, 64))
+    np.testing.assert_array_equal(
+        np.asarray(pp.forward(x, activation="silu")),
+        np.asarray(lpp.forward(x, activation="silu")))
+
+
+def test_checkpoint_naive_layout_roundtrip(tmp_path):
+    """The g_idx (naive) layout keeps its unordered metadata through disk."""
+    from repro.core import reorder
+
+    rng = jax.random.PRNGKey(1)
+    r = jax.random.split(rng, 2)
+    pp = reorder.plan_pair(
+        jax.random.normal(r[0], (64, 128)),
+        jax.random.normal(r[1], (128, 64)),
+        scheme="naive-actorder", group_size_up=32, group_size_down=32,
+        rng=rng)
+    path = checkpoint.save(str(tmp_path / "naive"), pp)
+    lpp = checkpoint.load(path)
+    assert lpp.scheme == "naive-actorder"
+    assert lpp.up.kind == "naive" and lpp.up.g_idx is not None
+    assert lpp.p2 is None
+    _assert_trees_equal(pp, lpp)
+
+
+def test_checkpoint_load_rejects_legacy_files(tmp_path):
+    """npz files without the embedded schema demand the template path."""
+    p = tmp_path / "legacy.npz"
+    np.savez(p, **{"a": np.ones(3)})
+    with pytest.raises(ValueError, match="no embedded tree schema"):
+        checkpoint.load(str(p))
+    # restore() still works on them
+    out = checkpoint.restore(str(p), {"a": jnp.zeros(3)})
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# compiler stages
+# ---------------------------------------------------------------------------
+
+def test_model_init_is_the_compiler():
+    """``Model.init`` == raw init + compile_params — one pipeline."""
+    cfg = _smoke_cfg()
+    key = jax.random.PRNGKey(0)
+    m = build_model(cfg)
+    planned = m.init(key)
+    by_hand = compiler.compile_params(
+        cfg, m.init_raw(key),
+        rng=jax.random.fold_in(key, compiler.PLAN_RNG_STREAM))
+    _assert_trees_equal(planned, by_hand)
+    pairs = [x for x in jax.tree_util.tree_leaves(
+        planned, is_leaf=lambda x: isinstance(x, PlannedPair))
+        if isinstance(x, PlannedPair)]
+    assert pairs and all(p.scheme == "tp-aware" for p in pairs)
+
+
+def test_shard_assemble_identity():
+    """stage_shard slices, artifact.params() concatenates: identity."""
+    cfg = _smoke_cfg()
+    art = _prepare(cfg, tp=2)
+    assert len(art.rank_params) == 2
+    planned = build_model(cfg).init(jax.random.PRNGKey(0))
+    _assert_trees_equal(planned, art.params())
+    # sharded leaves really are split (not everything replicated)
+    shards = art.manifest["leaf_shards"]
+    assert sum(v is not None for v in shards.values()) > 0
+    # and a sharded leaf's rank slice is 1/tp of the global extent
+    key = next(k for k, v in shards.items() if v is not None)
+    flat0 = checkpoint.flatten_keys(art.rank_params[0])
+    flatg = checkpoint.flatten_keys(art.params())
+    dim = shards[key]
+    assert flat0[key].shape[dim] * 2 == flatg[key].shape[dim]
+
+
+def test_attention_fold_stage():
+    """cfg.quant.attn_tp_aware compiles V->O folds into the aux tree."""
+    cfg = _smoke_cfg().with_quant(attn_tp_aware=True)
+    art = _prepare(cfg, tp=2)
+    assert art.aux is not None and art.aux["attn_plans"]
+    (path, plans), = art.aux["attn_plans"].items()
+    assert "attn" in path
+    assert isinstance(plans, PlannedPair) and plans.scheme == "tp-aware"
+    # stacked over layers
+    assert plans.up.qweight.ndim == 3
+
+
+# ---------------------------------------------------------------------------
+# artifact round-trip: no quantization at load, bit-identical serving
+# ---------------------------------------------------------------------------
+
+def _forbid_requantize(monkeypatch):
+    """Loading an artifact must never re-run the offline pipeline."""
+    from repro.core import quantization, reorder
+
+    def boom(*a, **k):
+        raise AssertionError("offline pipeline invoked at load time")
+
+    monkeypatch.setattr(quantization, "quantize", boom)
+    monkeypatch.setattr(reorder, "quantize_pair", boom)
+    monkeypatch.setattr(reorder, "plan_pair", boom)
+    monkeypatch.setattr(compiler, "stage_quantize", boom)
+
+
+def test_artifact_serves_bit_identical_logits(tmp_path, monkeypatch):
+    """The acceptance criterion: prepare -> save -> load -> serve produces
+    logits bit-identical to the in-memory path for the same
+    config/policy/seed, without invoking GPTQ or plan_pair at load."""
+    from repro.runtime.serve import make_engine
+
+    cfg = _smoke_cfg()
+    art_dir = str(tmp_path / "artifact")
+    _prepare(cfg, tp=1, seed=0).save(art_dir)
+
+    eng_mem = make_engine(cfg, jax.random.PRNGKey(0), max_seq=16)
+
+    _forbid_requantize(monkeypatch)
+    eng_art = make_engine(cfg, jax.random.PRNGKey(0), max_seq=16,
+                          artifact=art_dir)
+    _assert_trees_equal(eng_mem.params, eng_art.params)
+
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 6), 0,
+                              cfg.vocab_size)
+    y_mem = eng_mem.model.forward(eng_mem.params, {"tokens": toks},
+                                  REPLICATED)
+    y_art = eng_art.model.forward(eng_art.params, {"tokens": toks},
+                                  REPLICATED)
+    np.testing.assert_array_equal(np.asarray(y_mem), np.asarray(y_art))
+
+    # and through a decode step (the serving hot path)
+    cache = eng_art.init_cache(2)
+    l_art, _ = eng_art._decode(eng_art.params, cache, toks[:, 0],
+                               jnp.int32(0))
+    cache = eng_mem.init_cache(2)
+    l_mem, _ = eng_mem._decode(eng_mem.params, cache, toks[:, 0],
+                               jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(l_mem), np.asarray(l_art))
+
+
+def test_artifact_rejects_mismatched_plan(tmp_path):
+    cfg = _smoke_cfg()
+    art_dir = str(tmp_path / "artifact")
+    _prepare(cfg, tp=2).save(art_dir)
+    art = DeploymentArtifact.load(art_dir)
+    pol = ExecutionPolicy.from_config(cfg)
+
+    art.validate(cfg=cfg, policy=pol, tp=2)          # the matching plan
+    with pytest.raises(PlanMismatchError, match="model-axis degree"):
+        art.validate(tp=4)
+    with pytest.raises(PlanMismatchError, match="policy"):
+        art.validate(policy=pol.with_(collective="quant-int8"))
+    with pytest.raises(PlanMismatchError, match="scheme|policy"):
+        art.validate(policy=pol.with_(scheme="exllama"))
+    with pytest.raises(PlanMismatchError, match="config hash"):
+        art.validate(cfg=cfg.with_(d_ff=cfg.d_ff * 2))
+    with pytest.raises(PlanMismatchError, match="compiled for"):
+        art.validate(cfg=dataclasses.replace(cfg, arch_id="other"))
+
+
+def test_engine_refuses_mismatched_artifact(tmp_path):
+    from repro.runtime.serve import make_engine
+
+    cfg = _smoke_cfg()
+    art_dir = str(tmp_path / "artifact")
+    _prepare(cfg, tp=2).save(art_dir)      # pre-sharded for TP=2
+    with pytest.raises(PlanMismatchError, match="model-axis degree"):
+        # single-device ctx (tp=1) != the artifact's TP=2 plan
+        make_engine(cfg, max_seq=16, artifact=art_dir)
+
+
+def test_artifact_manifest_contents(tmp_path):
+    cfg = _smoke_cfg()
+    art_dir = str(tmp_path / "artifact")
+    _prepare(cfg, tp=2, seed=5).save(art_dir)
+    man = DeploymentArtifact.load(art_dir).manifest
+    assert man["arch_id"] == cfg.arch_id
+    assert man["tp"] == 2 and man["seed"] == 5
+    assert man["policy"]["scheme"] == "tp-aware"
+    assert man["policy"]["collective"] == "psum"
+    (pair,) = man["pairs"]
+    assert pair["scheme"] == "tp-aware"
+    assert pair["k1"] == cfg.d_model and pair["n1"] == cfg.d_ff
+    assert pair["gate"] is True and pair["stacked"] == [cfg.num_layers]

@@ -75,6 +75,83 @@ def test_scheduler_drains_and_batches():
     assert all(r.done for r in done.values())
 
 
+def test_scheduler_admits_between_decode_steps():
+    """Continuous batching: a queued request is admitted into a retired
+    slot while other slots are still decoding — and every request's
+    greedy output is bit-identical to running it alone (per-slot position
+    clocks + the causal mask isolate slots exactly)."""
+    cfg = get_smoke_config("qwen3-4b")
+    eng = make_engine(cfg, jax.random.PRNGKey(0), max_seq=24)
+    greedy = sampling.SamplingConfig(temperature=0.0)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 6, 4)]
+    new = (2, 8, 3)   # req 0 retires early; req 2 takes its slot
+
+    sched = Scheduler(eng, max_batch=2, prompt_budget=8, scfg=greedy)
+    for i, (p, mn) in enumerate(zip(prompts, new)):
+        sched.submit(Request(rid=i, prompt=p, max_new_tokens=mn))
+    done = sched.run()
+    assert sorted(done) == [0, 1, 2]
+    assert [len(done[i].output) for i in range(3)] == list(new)
+    # the third request entered mid-stream, not after the first wave
+    admitted = dict((rid, step) for step, rid in sched.admissions)
+    assert admitted[2] > 0
+    last_step = max(p.size for p in prompts[:2]) + max(new[:2])
+    assert admitted[2] < last_step
+
+    for i, (p, mn) in enumerate(zip(prompts, new)):
+        inputs = {"tokens": jnp.asarray(p)[None, :]}
+        ref = np.asarray(eng.generate(
+            jax.random.PRNGKey(9), inputs, jnp.asarray([p.size]),
+            max_new_tokens=mn, scfg=greedy))[0]
+        np.testing.assert_array_equal(np.asarray(done[i].output), ref,
+                                      err_msg=f"req {i}")
+
+
+def test_scheduler_vector_pos_matches_scalar_decode():
+    """The per-slot position decode program agrees bit-for-bit with the
+    scalar-pos program when every slot shares the same clock."""
+    cfg = get_smoke_config("granite-3-8b")
+    eng = make_engine(cfg, jax.random.PRNGKey(0), max_seq=16)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 4), 0,
+                              cfg.vocab_size)
+    cache_s = eng.init_cache(2)
+    cache_v = eng.init_cache(2)
+    for t in range(4):
+        ls, cache_s = eng._decode(eng.params, cache_s, toks[:, t],
+                                  jnp.int32(t))
+        lv, cache_v = eng._decode(eng.params, cache_v, toks[:, t],
+                                  jnp.full((2,), t, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(ls), np.asarray(lv))
+    for a, b in zip(jax.tree_util.tree_leaves(cache_s),
+                    jax.tree_util.tree_leaves(cache_v)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scheduler_batch_drain_fallback_families():
+    """audio/vlm (batch-global cross prefill) and ssm/hybrid (per-lane
+    recurrent state that no position mask resets on slot reuse) fall back
+    to batch-drain and still drain the queue."""
+    for arch in ("rwkv6-3b", "recurrentgemma-2b"):
+        rec = make_engine(get_smoke_config(arch), jax.random.PRNGKey(0),
+                          max_seq=24)
+        assert not rec.supports_continuous, arch
+    cfg = get_smoke_config("whisper-large-v3")
+    eng = make_engine(cfg, jax.random.PRNGKey(0), max_seq=24)
+    assert not eng.supports_continuous
+    sched = Scheduler(eng, max_batch=2, prompt_budget=6,
+                      scfg=sampling.SamplingConfig(temperature=0.0))
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=4).astype(np.int32),
+            max_new_tokens=2))
+    done = sched.run()
+    assert sorted(done) == [0, 1, 2]
+    assert all(len(r.output) == 2 for r in done.values())
+
+
 def test_scheduler_rejects_oversized_prompt():
     cfg = get_smoke_config("qwen3-4b")
     eng = make_engine(cfg, jax.random.PRNGKey(0), max_seq=16)
