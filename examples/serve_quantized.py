@@ -46,7 +46,14 @@ def main():
     ap.add_argument("--collective", default="psum",
                     help="trailing collective spec (comm.dispatch registry "
                          "shorthand, e.g. psum, psum_scatter, "
-                         "cast:bfloat16, quant-int8, quant-int4)")
+                         "cast:bfloat16, quant-int8, quant-int4) or a "
+                         "per-layer plan, e.g. "
+                         "'per-layer:*.mlp=quant-int8:128,*=psum'")
+    ap.add_argument("--autotune-collectives", action="store_true",
+                    help="let the plan compiler pick a per-layer "
+                         "CollectivePlan (analytic bytes + calibration "
+                         "error probe; overrides --collective) — only "
+                         "meaningful with the prepare/serve two-step")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--artifact", default=None,
@@ -73,11 +80,16 @@ def main():
                                    args.arch)
             t0 = time.time()
             compiler.prepare(cfg, tp=TP, seed=0, policy=policy,
-                             extra_manifest={"smoke": True}).save(art_dir)
+                             extra_manifest={"smoke": True},
+                             autotune=args.autotune_collectives
+                             ).save(art_dir)
             print(f"prepared artifact in {time.time() - t0:.1f}s "
                   f"-> {art_dir}")
         # ---- step 2: load + validate (no quantization from here on) -------
         artifact = DeploymentArtifact.load(art_dir)
+        # the manifest is the source of truth for the plan (it may carry
+        # a tuned per-layer CollectivePlan the CLI flags don't know)
+        policy = artifact.policy()
 
     mesh = jax.make_mesh((2, TP), ("data", "model"))
     ctx = ParallelContext(mesh=mesh, batch_axes=("data",), policy=policy)

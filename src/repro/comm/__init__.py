@@ -1,7 +1,9 @@
-"""TP epilogue collectives: spec (``CollectiveSpec``) + strategy registry
-(``comm/dispatch.py``).  See DESIGN.md §1 for the architecture."""
+"""TP epilogue collectives: spec (``CollectiveSpec``), per-layer plan
+(``CollectivePlan``) + strategy registry (``comm/dispatch.py``).  See
+DESIGN.md §1 and §7 for the architecture."""
 
-from repro.comm.spec import CollectiveSpec
+from repro.comm.spec import CollectivePlan, CollectiveSpec, parse_collective
 from repro.comm import dispatch
 
-__all__ = ["CollectiveSpec", "dispatch"]
+__all__ = ["CollectivePlan", "CollectiveSpec", "parse_collective",
+           "dispatch"]

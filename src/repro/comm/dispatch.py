@@ -13,7 +13,13 @@ Strategy contract (``y_partial`` is one rank's full-size partial sum of
 the row-TP output, executing inside ``shard_map`` over mesh axis
 ``axis``):
 
-* ``apply(y_partial, axis, spec, policy) -> y`` — run the collective,
+* ``apply(y_partial, axis, spec, policy) -> y`` — run the collective.
+  **Dtype contract**: the result dtype is the INPUT dtype for every
+  strategy — wire dtypes (bf16 words, int8/int4 payloads) never leak
+  into the caller's residual stream, and at ``tp == 1`` every strategy
+  is the identity.  (``cast`` historically returned its wire dtype,
+  which compounded bf16 rounding per layer in an f32 stream — fixed,
+  see ``_Cast``.)
 * ``bytes_on_wire(shape, tp, spec) -> float`` — analytic per-device ICI
   bytes under the same ring cost model as ``launch/roofline.py``, so
   ``bench_comm`` accounts each strategy without compiling it,
@@ -171,10 +177,16 @@ class _PsumScatter(CollectiveStrategy):
 class _Cast(CollectiveStrategy):
     """All-reduce in a low-bit wire dtype (default bf16): the per-rank f32
     partial sums are already complete, so only the cross-rank accumulation
-    is lower-precision.  The result stays in the wire dtype."""
+    is lower-precision.  The result is cast BACK to the input dtype — the
+    wire dtype is a transport detail, not an output contract (returning
+    bf16 into an f32 residual stream silently downgraded every subsequent
+    layer, compounding per layer; the quantized strategies already
+    restored ``y.dtype``, so this makes the contract uniform)."""
 
     def apply(self, y, axis, spec, policy):
-        return jax.lax.psum(y.astype(spec.wire_dtype), axis)
+        if jax.lax.psum(1, axis) == 1:
+            return y
+        return jax.lax.psum(y.astype(spec.wire_dtype), axis).astype(y.dtype)
 
     def bytes_on_wire(self, shape, tp, spec):
         return _full_bytes(shape, spec.wire_dtype) * 2 * (tp - 1) / tp
@@ -209,9 +221,15 @@ class _QuantInt8(CollectiveStrategy):
     3. re-quantize the reduced chunk and ``all_gather`` payloads + scales;
        every rank dequantizes the assembled result locally.
 
-    When the output dim does not tile ``tp``, falls back to a one-phase
-    variant: quantize the whole partial, all-gather every rank's payload,
-    dequant-accumulate locally (same numerics, more wire bytes).
+    When the output dim does not tile ``tp``, the partial is zero-padded
+    on the wire up to the next multiple of ``tp`` and sliced after — the
+    SAME two-phase ring runs for every shape.  (The old one-phase
+    fallback all-gathered every rank's full-size payload, ``payload *
+    (tp - 1)`` per-device bytes vs the ring's ``2 * payload *
+    (tp - 1) / tp`` — up to ``tp/2``× the wire traffic — while
+    ``bytes_on_wire`` charged the two paths inconsistently, inflating
+    ``bench_comm`` vs_psum ratios on non-tiling dims.  Both the
+    implementation and the accounting are now the ring model.)
     """
 
     def apply(self, y, axis, spec, policy):
@@ -221,39 +239,33 @@ class _QuantInt8(CollectiveStrategy):
         n = y.shape[-1]
         out_dtype = y.dtype
         y32 = y.astype(jnp.float32)
-        if n % tp == 0:
-            chunk = n // tp
-            bs = choose_group_size(chunk, spec.block_size)
-            yc = jnp.moveaxis(y32.reshape(*y32.shape[:-1], tp, chunk), -2, 0)
-            q, s = _blockwise_quantize(yc, bs)
-            q = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0,
-                                   tiled=True)
-            s = jax.lax.all_to_all(s, axis, split_axis=0, concat_axis=0,
-                                   tiled=True)
-            red = jnp.sum(_blockwise_dequantize(q, s, bs), axis=0)
-            q2, s2 = _blockwise_quantize(red, bs)
-            qg = jax.lax.all_gather(q2, axis, axis=q2.ndim - 1, tiled=True)
-            sg = jax.lax.all_gather(s2, axis, axis=s2.ndim - 1, tiled=True)
-            return _blockwise_dequantize(qg, sg, bs).astype(out_dtype)
-        bs = choose_group_size(n, spec.block_size)
-        q, s = _blockwise_quantize(y32, bs)
-        qg = jax.lax.all_gather(q, axis)
-        sg = jax.lax.all_gather(s, axis)
-        return jnp.sum(_blockwise_dequantize(qg, sg, bs),
-                       axis=0).astype(out_dtype)
+        pad = (-n) % tp
+        if pad:
+            y32 = jnp.pad(y32, [(0, 0)] * (y32.ndim - 1) + [(0, pad)])
+        chunk = (n + pad) // tp
+        bs = choose_group_size(chunk, spec.block_size)
+        yc = jnp.moveaxis(y32.reshape(*y32.shape[:-1], tp, chunk), -2, 0)
+        q, s = _blockwise_quantize(yc, bs)
+        q = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0,
+                               tiled=True)
+        s = jax.lax.all_to_all(s, axis, split_axis=0, concat_axis=0,
+                               tiled=True)
+        red = jnp.sum(_blockwise_dequantize(q, s, bs), axis=0)
+        q2, s2 = _blockwise_quantize(red, bs)
+        qg = jax.lax.all_gather(q2, axis, axis=q2.ndim - 1, tiled=True)
+        sg = jax.lax.all_gather(s2, axis, axis=s2.ndim - 1, tiled=True)
+        out = _blockwise_dequantize(qg, sg, bs)
+        return (out[..., :n] if pad else out).astype(out_dtype)
 
     def bytes_on_wire(self, shape, tp, spec):
         if tp <= 1:
             return 0.0
-        n = shape[-1]
-        n_elts = math.prod(shape)
-        two_phase = n % tp == 0
-        bs = choose_group_size(n // tp if two_phase else n, spec.block_size)
+        n_pad = shape[-1] + (-shape[-1]) % tp      # zero-padded on the wire
+        n_elts = math.prod(shape[:-1]) * n_pad
+        bs = choose_group_size(n_pad // tp, spec.block_size)
         payload = n_elts * 1 + (n_elts / bs) * 2   # int8 + f16 scales
-        if two_phase:
-            # all_to_all phase + all_gather phase, each (tp-1)/tp of payload
-            return 2 * payload * (tp - 1) / tp
-        return payload * (tp - 1)                  # one-phase all-gather
+        # all_to_all phase + all_gather phase, each (tp-1)/tp of payload
+        return 2 * payload * (tp - 1) / tp
 
 
 # ---------------------------------------------------------------------------
@@ -313,9 +325,11 @@ class _QuantInt4(CollectiveStrategy):
     (``quantization.pack_int4``: 8 values per uint32) plus an f16
     (scale, zero) pair per block — asymmetric, because 15 levels waste
     too much range on the symmetric variant's unused negative tail.
-    Falls back to the one-phase variant when the output dim does not tile
-    ``tp * 8`` (packing needs whole uint32 words per chunk); dims not
-    divisible by 8 are zero-padded on the wire and sliced after.
+    When the output dim does not tile ``tp * 8`` (packing needs whole
+    uint32 words per chunk), the partial is zero-padded on the wire up
+    to the next such multiple and sliced after — the same padded ring
+    (and the same ring ``bytes_on_wire`` accounting) as ``quant-int8``;
+    the old full-payload one-phase all-gather fallback is gone.
     """
 
     def apply(self, y, axis, spec, policy):
@@ -325,51 +339,37 @@ class _QuantInt4(CollectiveStrategy):
         n = y.shape[-1]
         out_dtype = y.dtype
         y32 = y.astype(jnp.float32)
-        if n % tp == 0 and (n // tp) % PACK == 0:
-            chunk = n // tp
-            bs = choose_group_size(chunk, spec.block_size)
-            yc = jnp.moveaxis(y32.reshape(*y32.shape[:-1], tp, chunk), -2, 0)
-            q, s, z = _blockwise_quantize_int4(yc, bs)
-            qp = _pack4_last(q)
-            qp = jax.lax.all_to_all(qp, axis, split_axis=0, concat_axis=0,
-                                    tiled=True)
-            s = jax.lax.all_to_all(s, axis, split_axis=0, concat_axis=0,
-                                   tiled=True)
-            z = jax.lax.all_to_all(z, axis, split_axis=0, concat_axis=0,
-                                   tiled=True)
-            red = jnp.sum(_blockwise_dequantize_int4(
-                _unpack4_last(qp), s, z, bs), axis=0)
-            q2, s2, z2 = _blockwise_quantize_int4(red, bs)
-            qp2 = _pack4_last(q2)
-            qg = jax.lax.all_gather(qp2, axis, axis=qp2.ndim - 1, tiled=True)
-            sg = jax.lax.all_gather(s2, axis, axis=s2.ndim - 1, tiled=True)
-            zg = jax.lax.all_gather(z2, axis, axis=z2.ndim - 1, tiled=True)
-            return _blockwise_dequantize_int4(
-                _unpack4_last(qg), sg, zg, bs).astype(out_dtype)
-        # one-phase fallback: pad to whole uint32 words, gather, reduce
-        pad = (-n) % PACK
+        pad = (-n) % (tp * PACK)
         if pad:
             y32 = jnp.pad(y32, [(0, 0)] * (y32.ndim - 1) + [(0, pad)])
-        bs = choose_group_size(n + pad, spec.block_size)
-        q, s, z = _blockwise_quantize_int4(y32, bs)
-        qg = jax.lax.all_gather(_pack4_last(q), axis)
-        sg = jax.lax.all_gather(s, axis)
-        zg = jax.lax.all_gather(z, axis)
+        chunk = (n + pad) // tp
+        bs = choose_group_size(chunk, spec.block_size)
+        yc = jnp.moveaxis(y32.reshape(*y32.shape[:-1], tp, chunk), -2, 0)
+        q, s, z = _blockwise_quantize_int4(yc, bs)
+        qp = _pack4_last(q)
+        qp = jax.lax.all_to_all(qp, axis, split_axis=0, concat_axis=0,
+                                tiled=True)
+        s = jax.lax.all_to_all(s, axis, split_axis=0, concat_axis=0,
+                               tiled=True)
+        z = jax.lax.all_to_all(z, axis, split_axis=0, concat_axis=0,
+                               tiled=True)
         red = jnp.sum(_blockwise_dequantize_int4(
-            _unpack4_last(qg), sg, zg, bs), axis=0)
-        return red[..., :n].astype(out_dtype)
+            _unpack4_last(qp), s, z, bs), axis=0)
+        q2, s2, z2 = _blockwise_quantize_int4(red, bs)
+        qp2 = _pack4_last(q2)
+        qg = jax.lax.all_gather(qp2, axis, axis=qp2.ndim - 1, tiled=True)
+        sg = jax.lax.all_gather(s2, axis, axis=s2.ndim - 1, tiled=True)
+        zg = jax.lax.all_gather(z2, axis, axis=z2.ndim - 1, tiled=True)
+        out = _blockwise_dequantize_int4(_unpack4_last(qg), sg, zg, bs)
+        return (out[..., :n] if pad else out).astype(out_dtype)
 
     def bytes_on_wire(self, shape, tp, spec):
         if tp <= 1:
             return 0.0
         n = shape[-1]
-        two_phase = n % tp == 0 and (n // tp) % PACK == 0
-        n_pad = n if two_phase else n + ((-n) % PACK)
+        n_pad = n + (-n) % (tp * PACK)             # whole words per chunk
         n_elts = math.prod(shape[:-1]) * n_pad
-        bs = choose_group_size(n_pad // tp if two_phase else n_pad,
-                               spec.block_size)
+        bs = choose_group_size(n_pad // tp, spec.block_size)
         # nibble-packed payload + f16 (scale, zero) per block
         payload = n_elts * 0.5 + (n_elts / bs) * 4
-        if two_phase:
-            return 2 * payload * (tp - 1) / tp
-        return payload * (tp - 1)
+        return 2 * payload * (tp - 1) / tp

@@ -1,4 +1,4 @@
-"""CollectiveSpec — the TP epilogue collective as a first-class plan.
+"""CollectiveSpec / CollectivePlan — TP epilogue collectives as a plan.
 
 The paper's speedup is a *communication* plan decided a priori: TP-Aware
 pays only the trailing AllReduce while the Naive Algorithm's AllGather
@@ -21,6 +21,15 @@ and CLIs:
   ``quantization.pack_int4`` layout the weights use (block default 32 —
   15 levels need tighter blocks than int8's 255).
 
+``CollectivePlan`` lifts the spec to a *per-layer* decision (tolerance
+to wire compression varies sharply by layer — Hansen-Palmus et al.
+2024; Dong et al. 2024): an ordered ``(path glob, CollectiveSpec)`` map
+plus a default, resolved per pair path at the epilogue.  The CLI/config
+shorthand is ``"per-layer:<glob>=<spec>[,...][,*=<default>]"``, e.g.
+``"per-layer:*.mlp=quant-int8:128,attn*=cast:bf16,*=psum"``; a bare
+``CollectiveSpec`` still works everywhere as a one-entry plan
+(``parse_collective`` keeps both forms first-class).
+
 Strategy *implementations* live in ``comm/dispatch.py``; the spec only
 describes the plan.  ``spec.bytes_on_wire(shape, tp)`` resolves the
 strategy's analytic per-device ICI cost so benchmarks and the roofline
@@ -30,15 +39,21 @@ can account communication per strategy without compiling anything.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import fnmatch
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["CollectiveSpec"]
+__all__ = ["CollectiveSpec", "CollectivePlan", "parse_collective"]
 
 _WIRE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
-                "float16": jnp.float16}
+                "float16": jnp.float16,
+                # CLI-friendly aliases (the canonical shorthand always
+                # prints the full dtype name)
+                "f32": jnp.float32, "fp32": jnp.float32,
+                "bf16": jnp.bfloat16,
+                "f16": jnp.float16, "fp16": jnp.float16}
 
 
 def _canon_wire_dtype(dt):
@@ -139,6 +154,17 @@ class CollectiveSpec:
     def with_(self, **kw) -> "CollectiveSpec":
         return dataclasses.replace(self, **kw)
 
+    # ---- plan interface ---------------------------------------------------
+
+    def resolve(self, pair_path: Optional[str] = None) -> "CollectiveSpec":
+        """A bare spec is a one-entry plan: every pair path resolves to it
+        (the uniform lookup call sites use — see ``CollectivePlan``)."""
+        return self
+
+    def specs(self) -> tuple["CollectiveSpec", ...]:
+        """Distinct specs this plan can resolve to (just itself)."""
+        return (self,)
+
     # ---- analytic cost ----------------------------------------------------
 
     def bytes_on_wire(self, shape, tp: int) -> float:
@@ -148,3 +174,140 @@ class CollectiveSpec:
         from repro.comm import dispatch
         return dispatch.resolve(self.name).bytes_on_wire(
             tuple(shape), int(tp), self)
+
+
+# ---------------------------------------------------------------------------
+# per-layer plans
+# ---------------------------------------------------------------------------
+
+_PLAN_PREFIX = "per-layer:"
+
+
+def _normalize_path(path: str) -> str:
+    return path.replace("/", ".")
+
+
+def _match(path: str, pattern: str) -> bool:
+    """Glob-match ``pattern`` against a dotted pair path.
+
+    The pattern is tried against the full path AND every dot-suffix, so
+    ``"mlp"`` / ``"*.mlp"`` / ``"attn*"`` all hit ``"layers.mlp"`` /
+    ``"super.attn.mlp"`` the way a CLI user expects, while a fully
+    qualified path (what the autotuner writes) still matches exactly.
+    """
+    segs = _normalize_path(path).split(".")
+    return any(
+        fnmatch.fnmatchcase(".".join(segs[i:]), pattern)
+        for i in range(len(segs)))
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectivePlan:
+    """Per-layer collective selection, fully specified and frozen.
+
+    An ordered ``(path glob, CollectiveSpec)`` map plus a default:
+    ``resolve(pair_path)`` returns the first entry whose glob matches
+    the pair's dotted path (e.g. ``"layers.mlp"``,
+    ``"layers.moe.experts"``), else ``default``.  Hashable, so it lives
+    on ``ExecutionPolicy.collective`` (a jit static argument) exactly
+    like a bare ``CollectiveSpec`` — which is the degenerate
+    zero-entry plan (see ``CollectiveSpec.resolve``).
+
+    Shorthand (``parse``/``shorthand`` round-trip exactly)::
+
+        per-layer:*.mlp=quant-int8:128,attn*=cast:bfloat16,*=psum
+
+    Entries apply in order; ``*=<spec>`` names the default and must come
+    last (anything after a catch-all would be unreachable).
+    """
+
+    entries: tuple = ()                       # ((glob, CollectiveSpec), ...)
+    default: CollectiveSpec = CollectiveSpec()
+
+    def __post_init__(self):
+        ent = []
+        for item in self.entries:
+            pat, spec = item
+            if not isinstance(pat, str) or not pat:
+                raise ValueError(
+                    f"plan entry pattern must be a non-empty string, "
+                    f"got {pat!r}")
+            ent.append((pat, CollectiveSpec.parse(spec)))
+        object.__setattr__(self, "entries", tuple(ent))
+        object.__setattr__(self, "default",
+                           CollectiveSpec.parse(self.default))
+
+    # ---- construction -----------------------------------------------------
+
+    @classmethod
+    def parse(cls, value) -> "CollectivePlan":
+        """Parse a plan, a ``per-layer:`` shorthand, or anything
+        ``CollectiveSpec.parse`` accepts (-> one-entry plan)."""
+        if isinstance(value, CollectivePlan):
+            return value
+        if not (isinstance(value, str) and value.startswith(_PLAN_PREFIX)):
+            return cls(default=CollectiveSpec.parse(value))
+        body = value[len(_PLAN_PREFIX):]
+        entries, default, saw_default = [], CollectiveSpec(), False
+        for item in body.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            if saw_default:
+                raise ValueError(
+                    f"plan entry {item!r} comes after the catch-all "
+                    f"'*=...' and would never match (in {value!r})")
+            pat, sep, short = item.partition("=")
+            if not sep or not pat:
+                raise ValueError(
+                    f"plan entry {item!r} is not '<glob>=<spec>' "
+                    f"(in {value!r})")
+            if pat == "*":
+                default, saw_default = CollectiveSpec.parse(short), True
+            else:
+                entries.append((pat, CollectiveSpec.parse(short)))
+        return cls(entries=tuple(entries), default=default)
+
+    def shorthand(self) -> str:
+        """The string form ``parse`` round-trips (manifests, CLIs, logs)."""
+        parts = [f"{pat}={spec.shorthand()}" for pat, spec in self.entries]
+        parts.append(f"*={self.default.shorthand()}")
+        return _PLAN_PREFIX + ",".join(parts)
+
+    def with_(self, **kw) -> "CollectivePlan":
+        return dataclasses.replace(self, **kw)
+
+    # ---- lookup -----------------------------------------------------------
+
+    def resolve(self, pair_path: Optional[str] = None) -> CollectiveSpec:
+        """The spec closing the row-TP epilogue at ``pair_path`` (first
+        matching entry, else the default; ``None`` — an anonymous call
+        site — always gets the default)."""
+        if pair_path is not None:
+            for pat, spec in self.entries:
+                if _match(pair_path, pat):
+                    return spec
+        return self.default
+
+    def specs(self) -> tuple[CollectiveSpec, ...]:
+        """Distinct specs this plan can resolve to (entry order, default
+        last) — what the serve banner and manifest checks enumerate."""
+        out = []
+        for _, spec in self.entries:
+            if spec not in out:
+                out.append(spec)
+        if self.default not in out:
+            out.append(self.default)
+        return tuple(out)
+
+
+def parse_collective(value) -> Union[CollectiveSpec, CollectivePlan]:
+    """Parse ``ExecutionPolicy.collective``-likes: a spec, a plan, or any
+    string shorthand of either (``None`` -> the default psum spec).
+    Bare specs stay specs so existing call sites (and policy equality)
+    are untouched; only ``per-layer:`` shorthands and explicit plans
+    produce a ``CollectivePlan``."""
+    if isinstance(value, CollectivePlan) or (
+            isinstance(value, str) and value.startswith(_PLAN_PREFIX)):
+        return CollectivePlan.parse(value)
+    return CollectiveSpec.parse(value)

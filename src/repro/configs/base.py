@@ -52,10 +52,12 @@ class QuantConfig:
     # kernel ("auto" picks pallas on TPU for ordered layouts, else jnp),
     # the GEMM compute dtype, and the row-TP epilogue collective — a
     # ``CollectiveSpec`` shorthand dispatched by ``comm/dispatch.py``
-    # (e.g. "psum", "psum_scatter", "cast:bfloat16", "quant-int8", "none").
+    # (e.g. "psum", "psum_scatter", "cast:bfloat16", "quant-int8",
+    # "none"), or a per-layer ``CollectivePlan`` shorthand
+    # ("per-layer:<glob>=<spec>,...,*=<default>", DESIGN.md §7).
     backend: str = "auto"        # "auto" | kernels.dispatch registry key
     compute_dtype: str = "float32"   # "float32" | "bfloat16" | "float16"
-    collective: str = "psum"     # comm.dispatch registry shorthand
+    collective: str = "psum"     # comm spec/plan shorthand
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,10 +12,15 @@ Both halves of the plan dispatch through registries:
 
 * ``policy.backend`` — key into ``kernels/dispatch.py``
   (``(layout kind, backend) -> kernel``),
-* ``policy.collective`` — a ``CollectiveSpec`` resolved by
-  ``comm/dispatch.py`` (``name -> strategy``); string shorthands like
-  ``"psum"``, ``"cast:bfloat16"`` or ``"quant-int8"`` are accepted and
-  parsed via ``CollectiveSpec.parse``.
+* ``policy.collective`` — a ``CollectiveSpec`` (one collective for every
+  row-TP epilogue) or a ``CollectivePlan`` (per-layer selection: ordered
+  ``{path glob: spec}`` + default), resolved by ``comm/dispatch.py``
+  (``name -> strategy``); string shorthands like ``"psum"``,
+  ``"cast:bfloat16"``, ``"quant-int8"`` or
+  ``"per-layer:*.mlp=quant-int8,*=psum"`` are accepted and parsed via
+  ``comm.parse_collective``.  Epilogues look their spec up with
+  ``policy.collective.resolve(pair_path)`` — a bare spec resolves to
+  itself for every path.
 
 Construction paths:
 
@@ -40,7 +45,8 @@ from typing import Any, Optional, Union
 import jax
 import jax.numpy as jnp
 
-from repro.comm.spec import CollectiveSpec
+from repro.comm.spec import (CollectivePlan, CollectiveSpec,
+                             parse_collective)
 
 __all__ = [
     "KernelTiling", "ExecutionPolicy", "DEFAULT_POLICY", "resolve_policy",
@@ -78,15 +84,17 @@ class ExecutionPolicy:
     weights were planned with (the runtime always trusts the plan pytree's
     own ``scheme`` field; a policy's copy exists so config-time code can
     carry the full plan in one object).  ``collective`` is the row-TP
-    epilogue plan — a ``CollectiveSpec`` dispatched by
-    ``comm/dispatch.py`` (string shorthands accepted).
+    epilogue plan — a ``CollectiveSpec`` applied uniformly, or a
+    ``CollectivePlan`` resolving a spec per pair path (string shorthands
+    of either accepted); each epilogue dispatches its resolved spec
+    through ``comm/dispatch.py``.
     """
 
     scheme: str = "tp-aware"
     backend: str = "jnp"            # key into kernels.dispatch registry
     compute_dtype: Any = jnp.float32
     accum_dtype: Any = jnp.float32
-    collective: Union[CollectiveSpec, str] = CollectiveSpec()
+    collective: Union[CollectiveSpec, CollectivePlan, str] = CollectiveSpec()
     tiling: KernelTiling = KernelTiling()
 
     def __post_init__(self):
@@ -95,7 +103,7 @@ class ExecutionPolicy:
             raise ValueError(
                 f"unknown scheme {self.scheme!r}, expected one of {SCHEMES}")
         object.__setattr__(self, "collective",
-                           CollectiveSpec.parse(self.collective))
+                           parse_collective(self.collective))
         object.__setattr__(self, "compute_dtype",
                            _canon_dtype(self.compute_dtype))
         object.__setattr__(self, "accum_dtype",
@@ -147,7 +155,7 @@ class ExecutionPolicy:
                     f"{sorted(k for k in dtypes if k)}") from None
 
         compute = lookup("compute_dtype", qc.compute_dtype)
-        collective = CollectiveSpec.parse(qc.collective)
+        collective = parse_collective(qc.collective)
         if qc.backend == "auto":
             return cls.auto(qc.scheme, compute_dtype=compute,
                             collective=collective)

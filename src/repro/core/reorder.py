@@ -58,7 +58,8 @@ class PlannedPair:
 
     def forward(self, x: jax.Array, policy=None, mesh=None, *,
                 axis: str = "model", batch_axes: tuple = (),
-                activation: Optional[str] = None) -> jax.Array:
+                activation: Optional[str] = None,
+                pair_path: Optional[str] = None) -> jax.Array:
         """Canonical runtime entry point: run the pair under a deployment
         ``policy`` (``ExecutionPolicy``; None = defaults).
 
@@ -66,7 +67,10 @@ class PlannedPair:
         mesh, the paper's explicit-collective shard_map path runs over
         mesh axis ``axis``.  The *layout* is always ``self.scheme`` (the
         plan is baked into the weights offline); the policy supplies the
-        kernel backend, dtypes, and trailing ``CollectiveSpec``.
+        kernel backend, dtypes, and the trailing collective —
+        ``policy.collective.resolve(pair_path)``, so a per-layer
+        ``CollectivePlan`` picks this pair's epilogue by its dotted param
+        path (None: the plan default / the bare spec).
         """
         from repro.core import schemes
 
@@ -75,7 +79,7 @@ class PlannedPair:
                 x, self, policy, activation=activation)
         return schemes.pair_forward_tp(
             x, self, mesh, policy, axis=axis, batch_axes=batch_axes,
-            activation=activation)
+            activation=activation, pair_path=pair_path)
 
     @property
     def k1(self) -> int:

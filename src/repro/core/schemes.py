@@ -149,13 +149,16 @@ def _pair_local_forward(
     axis: str,
     activation: Optional[str],
     policy: ExecutionPolicy,
+    pair_path: Optional[str] = None,
 ) -> jax.Array:
     """Per-rank body executed under shard_map.
 
     ``x`` is the local batch shard, replicated along ``axis``; the planned
     pair holds this rank's weight shards (column shards for up/gate, row
     shard for down, local P2 chunk for exllama).  The trailing collective
-    is whatever ``policy.collective`` names — resolved by the
+    is whatever ``policy.collective`` resolves to for this pair's dotted
+    path (``pair_path``; a bare ``CollectiveSpec`` resolves to itself, a
+    ``CollectivePlan`` does the per-layer glob lookup) — dispatched by the
     ``comm/dispatch.py`` registry, never branched here.
     """
     act = ACTIVATIONS[activation or "identity"]
@@ -200,7 +203,8 @@ def _pair_local_forward(
         raise ValueError(f"unknown scheme {pp.scheme!r}")
 
     # l.6 / l.3: close the row-TP layer with the planned collective.
-    return comm.apply(y2, axis, policy.collective, policy)
+    return comm.apply(y2, axis, policy.collective.resolve(pair_path),
+                      policy)
 
 
 def pair_forward_tp(
@@ -212,6 +216,7 @@ def pair_forward_tp(
     axis: str = "model",
     batch_axes: tuple = (),
     activation: Optional[str] = None,
+    pair_path: Optional[str] = None,
 ) -> jax.Array:
     """Tensor-parallel forward over mesh axis ``axis``.
 
@@ -219,16 +224,19 @@ def pair_forward_tp(
     given), replicated along ``axis``.  Weights are consumed with the
     canonical TP sharding (see ``pair_pspecs``); under jit, GSPMD moves the
     globally-laid-out arrays into place, or callers pass pre-sharded arrays.
+    ``pair_path`` names this pair in the deployment plan (dotted param
+    path) so a per-layer ``CollectivePlan`` resolves the right epilogue.
     """
     policy = resolve_policy(policy)
     bspec = (batch_axes if batch_axes else None,) + (None,) * (x.ndim - 1)
     x_spec = P(*bspec)
-    out_last = axis if comm.scatters_output(policy.collective) else None
+    spec = policy.collective.resolve(pair_path)
+    out_last = axis if comm.scatters_output(spec) else None
     out_spec = P(*((bspec[0],) + (None,) * (x.ndim - 2) + (out_last,)))
 
     fn = functools.partial(
         _pair_local_forward, axis=axis, activation=activation,
-        policy=policy)
+        policy=policy, pair_path=pair_path)
     return compat.shard_map(
         fn, mesh=mesh,
         in_specs=(x_spec, pair_pspecs(pp, axis)),

@@ -29,7 +29,8 @@ import time
 import jax
 import numpy as np
 
-from repro.comm import CollectiveSpec, dispatch as comm_dispatch
+from repro.comm import (CollectivePlan, dispatch as comm_dispatch,
+                        parse_collective)
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.policy import ExecutionPolicy
 from repro.launch import mesh as mesh_lib
@@ -41,9 +42,10 @@ from repro.runtime.serve import make_engine
 
 def _collective(value: str) -> str:
     """argparse type: validate against the comm registry, keep the string
-    (the config stores the shorthand; the policy parses it once)."""
+    (the config stores the shorthand; the policy parses it once).
+    Accepts bare specs and per-layer plans alike."""
     try:
-        CollectiveSpec.parse(value)
+        parse_collective(value)
     except ValueError as e:
         raise argparse.ArgumentTypeError(str(e)) from None
     return value
@@ -62,7 +64,10 @@ def _plan_args(ap: argparse.ArgumentParser):
                          "registered in comm.dispatch: "
                          + ", ".join(comm_dispatch.strategies())
                          + " (parameterized shorthands like cast:float16, "
-                           "quant-int8:64 or quant-int4:32 also accepted)")
+                           "quant-int8:64 or quant-int4:32 also accepted), "
+                           "or a per-layer plan 'per-layer:<glob>=<spec>"
+                           ",...,*=<default>' (e.g. per-layer:*.mlp="
+                           "quant-int8:128,*=psum)")
     ap.add_argument("--seed", type=int, default=0)
 
 
@@ -85,20 +90,35 @@ def prepare(argv=None):
                     help="target model-axis degree the shards are pre-"
                          "split for (serving must use the same)")
     ap.add_argument("--out", required=True, help="artifact directory")
+    ap.add_argument("--autotune-collectives", action="store_true",
+                    help="score every full-output collective per pair "
+                         "site (analytic wire bytes + calibration error "
+                         "probe; plan/tuner.py) and compile the chosen "
+                         "per-layer CollectivePlan into the artifact "
+                         "(overrides --collective's epilogue choice)")
+    ap.add_argument("--tune-budget", type=float, default=None,
+                    help="max relative activation error a tuned "
+                         "collective may introduce (default: the "
+                         "tuner's DEFAULT_BUDGET, 0.05)")
     args = ap.parse_args(argv)
 
     cfg = _build_cfg(args)
     policy = ExecutionPolicy.from_config(cfg)
     t0 = time.time()
     art = compiler.prepare(cfg, tp=args.tp, seed=args.seed, policy=policy,
-                           extra_manifest={"smoke": bool(args.smoke)})
+                           extra_manifest={"smoke": bool(args.smoke)},
+                           autotune=args.autotune_collectives,
+                           tune_budget=args.tune_budget)
     path = art.save(args.out)
     dt = time.time() - t0
     n_pairs = len(art.manifest["pairs"])
     print(f"prepared {args.arch} (scheme={args.scheme} "
-          f"collective={policy.collective.shorthand()} tp={args.tp}) "
-          f"-> {path}: {n_pairs} planned pair(s), "
+          f"collective={art.manifest['policy']['collective']} "
+          f"tp={args.tp}) -> {path}: {n_pairs} planned pair(s), "
           f"{len(art.manifest['leaf_shards'])} leaves, {dt:.1f}s")
+    for site in art.manifest.get("collective_tuner", ()):
+        print(f"  tuned {site['path']}: {site['chosen']} "
+              f"({site['status']})")
     return path
 
 
@@ -153,6 +173,16 @@ def main(argv=None):
         cfg = _build_cfg(args)
         policy = ExecutionPolicy.from_config(cfg)
         artifact, tp = None, args.tp
+
+    if isinstance(policy.collective, CollectivePlan):
+        # name where the per-layer plan came from, and what it resolves to
+        src = ("artifact manifest" if args.artifact
+               else "--collective flag")
+        plan = policy.collective
+        print(f"per-layer collective plan ({src}): "
+              + ", ".join(f"{pat} -> {spec.shorthand()}"
+                          for pat, spec in plan.entries)
+              + f", default -> {plan.default.shorthand()}")
 
     if tp > 1:
         mesh = mesh_lib.make_host_mesh(model=tp)

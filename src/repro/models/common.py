@@ -514,8 +514,13 @@ def mlp_specs(cfg: ModelConfig, params_like, axis="model", stacked=True,
 
 
 def mlp_forward(cfg: ModelConfig, p, x, ctx: ParallelContext, *,
-                activation=None):
-    """Apply an MLP block (quantized via the paper's schemes, or dense)."""
+                activation=None, path=None):
+    """Apply an MLP block (quantized via the paper's schemes, or dense).
+
+    ``path`` is the pair's dotted param path (e.g. ``"layers.mlp"``) —
+    the key a per-layer ``CollectivePlan`` resolves this epilogue's
+    collective by; model layer bodies pass the same path the plan
+    compiler records in the artifact manifest."""
     act = activation or cfg.activation
     if isinstance(p, PlannedPair):
         lead = x.shape[:-1]
@@ -523,7 +528,8 @@ def mlp_forward(cfg: ModelConfig, p, x, ctx: ParallelContext, *,
         pol = ctx.execution_policy
         if ctx.mesh is not None and ctx.shard_map_mlp:
             y = p.forward(x2, pol, ctx.mesh, axis=ctx.model_axis,
-                          batch_axes=ctx.batch_axes, activation=act)
+                          batch_axes=ctx.batch_axes, activation=act,
+                          pair_path=path)
         else:
             y = p.forward(x2, pol, activation=act)
         return y.reshape(*lead, -1).astype(x.dtype)

@@ -23,13 +23,18 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import CollectiveSpec
+from repro.comm import CollectiveSpec, dispatch as comm_dispatch
 from repro.core import compat, schemes
 from repro.core.policy import ExecutionPolicy
 
 from repro.configs.base import ModelConfig
 from repro.models import common as cm
 from repro.models.common import ParallelContext
+
+#: dotted pair paths matching the plan compiler's manifest entries — the
+#: keys a per-layer ``CollectivePlan`` addresses these epilogues by
+EXPERTS_PATH = "layers.moe.experts"
+DENSE_MLP_PATH = "layers.moe.dense_mlp"
 
 
 def _capacity(cfg: ModelConfig, tokens: int) -> int:
@@ -107,14 +112,18 @@ def _expert_ffn_local(cfg: ModelConfig, experts, xs, tp_axis: str,
     from repro.core.reorder import PlannedPair
 
     if isinstance(experts, PlannedPair):
-        # within-expert TP always closes with a full-precision psum spec
-        # (the EP combine needs every rank's complete expert output, and
-        # the compressed-collective knobs target the dense-MLP trailing
-        # collective, not this inner reduction); the vmapped per-expert
-        # GEMMs stay on the jnp kernel — Pallas under vmap-of-shard_map
-        # is not a supported lowering.
-        pol = policy.with_(collective=CollectiveSpec(name="psum"),
-                           backend="jnp")
+        # within-expert TP resolves its own spec from the deployment plan
+        # (path "layers.moe.experts"), like every other epilogue — but the
+        # EP combine needs every rank's COMPLETE expert output, so
+        # strategies that scatter the result or skip the reduction fall
+        # back to full-precision psum (compressed full-output strategies
+        # like quant-int8 are fine: they still return the whole tensor).
+        # The vmapped per-expert GEMMs stay on the jnp kernel — Pallas
+        # under vmap-of-shard_map is not a supported lowering.
+        spec = policy.collective.resolve(EXPERTS_PATH)
+        if spec.name == "none" or comm_dispatch.scatters_output(spec):
+            spec = CollectiveSpec(name="psum")
+        pol = policy.with_(collective=spec, backend="jnp")
         fn = functools.partial(
             schemes._pair_local_forward, axis=tp_axis,
             activation=cfg.activation, policy=pol)
@@ -182,7 +191,8 @@ def moe_forward_ep(cfg: ModelConfig, p, x, ctx: ParallelContext):
     )(x, p["router"], p["experts"])
 
     if cfg.dense_residual:
-        y = y + cm.mlp_forward(cfg, p["dense_mlp"], x, ctx)
+        y = y + cm.mlp_forward(cfg, p["dense_mlp"], x, ctx,
+                               path=DENSE_MLP_PATH)
     return y
 
 
@@ -231,7 +241,8 @@ def moe_forward(cfg: ModelConfig, p, x, ctx: ParallelContext,
     y = y.reshape(b, s, d)
 
     if cfg.dense_residual:
-        y = y + cm.mlp_forward(cfg, p["dense_mlp"], x, ctx)
+        y = y + cm.mlp_forward(cfg, p["dense_mlp"], x, ctx,
+                               path=DENSE_MLP_PATH)
 
     if return_aux:
         # Switch-style load-balance loss: E * sum_e f_e * P_e

@@ -201,13 +201,13 @@ def param_specs(cfg: ModelConfig, params, ctx: ParallelContext):
 
 
 def _rec_layer_fwd(cfg, ctx):
-    def body(x, lp, state):
+    def body(x, lp, state, path):
         h, ns = rec_block_forward(cfg, lp["rec"],
                                   cm.apply_norm(cfg, lp["ln1"], x), ctx,
                                   state)
         x = x + h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
-                           ctx)
+                           ctx, path=path)
         return x + h, ns
     return body
 
@@ -218,21 +218,21 @@ def forward(cfg: ModelConfig, params, batch, ctx: ParallelContext, *,
     rec_fwd = _rec_layer_fwd(cfg, ctx)
 
     def super_body(x, sp, _):
-        x, _s = rec_fwd(x, sp["rec1"], None)
-        x, _s = rec_fwd(x, sp["rec2"], None)
+        x, _s = rec_fwd(x, sp["rec1"], None, path="super.rec1.mlp")
+        x, _s = rec_fwd(x, sp["rec2"], None, path="super.rec2.mlp")
         ap = sp["attn"]
         h = cm.attention_forward(cfg, ap["attn"],
                                  cm.apply_norm(cfg, ap["ln1"], x), ctx,
                                  window=cfg.local_window)
         x = x + h
         h = cm.mlp_forward(cfg, ap["mlp"], cm.apply_norm(cfg, ap["ln2"], x),
-                           ctx)
+                           ctx, path="super.attn.mlp")
         return x + h
 
     x = cm.scan_layers(super_body, x, params["super"], ctx)
     if params["extra"] is not None:
         def extra_body(x, lp, _):
-            y, _s = rec_fwd(x, lp, None)
+            y, _s = rec_fwd(x, lp, None, path="extra.mlp")
             return y
         x = cm.scan_layers(extra_body, x, params["extra"], ctx)
     x = cm.apply_norm(cfg, params["final_norm"], x)
@@ -269,15 +269,15 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
 
     def super_body(x, xs):
         sp, (c1, c2, ca) = xs
-        x, n1 = rec_fwd(x, sp["rec1"], c1)
-        x, n2 = rec_fwd(x, sp["rec2"], c2)
+        x, n1 = rec_fwd(x, sp["rec1"], c1, path="super.rec1.mlp")
+        x, n2 = rec_fwd(x, sp["rec2"], c2, path="super.rec2.mlp")
         ap = sp["attn"]
         h, nca = cm.attention_decode(cfg, ap["attn"],
                                      cm.apply_norm(cfg, ap["ln1"], x),
                                      ca, pos, ctx, window=cfg.local_window)
         x = x + h
         h = cm.mlp_forward(cfg, ap["mlp"], cm.apply_norm(cfg, ap["ln2"], x),
-                           ctx)
+                           ctx, path="super.attn.mlp")
         return (x + h).astype(carry_dtype), (n1, n2, nca)
 
     carry_dtype = x.dtype
@@ -289,7 +289,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
     if params["extra"] is not None:
         def extra_body(x, xs):
             lp, st = xs
-            y, ns = rec_fwd(x, lp, st)
+            y, ns = rec_fwd(x, lp, st, path="extra.mlp")
             return y.astype(carry_dtype), ns
         x, nex = jax.lax.scan(extra_body, x, (params["extra"], cache["extra"]))
         new_cache["extra"] = nex

@@ -163,7 +163,8 @@ def channel_mix_forward(cfg: ModelConfig, p, x, ctx: ParallelContext,
     rgate = jax.nn.sigmoid(xr @ p["w_r"])
     # K->V pair: squared-relu "activation" between up and down — this is the
     # column-TP -> row-TP pair the paper's fold applies to.
-    v = cm.mlp_forward(cfg, p["pair"], xk, ctx, activation="relu2")
+    v = cm.mlp_forward(cfg, p["pair"], xk, ctx, activation="relu2",
+                       path="layers.cm.pair")
     return rgate * v, x[:, -1]
 
 

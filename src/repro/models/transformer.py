@@ -50,14 +50,14 @@ def param_specs(cfg: ModelConfig, params, ctx: ParallelContext):
     }
 
 
-def _layer(cfg, ctx, window):
+def _layer(cfg, ctx, window, mlp_path="layers.mlp"):
     def body(x, lp, _):
         h = cm.attention_forward(cfg, lp["attn"],
                                  cm.apply_norm(cfg, lp["ln1"], x), ctx,
                                  window=window, causal=cfg.causal)
         x = x + h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
-                           ctx)
+                           ctx, path=mlp_path)
         return x + h
     return body
 
@@ -92,7 +92,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
                                     lc, pos, ctx, window=window)
         x = x + h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
-                           ctx)
+                           ctx, path="layers.mlp")
         return x + h, nc
 
     x, new_cache = cm.scan_layers_cache(body, x, params["layers"], cache, ctx)

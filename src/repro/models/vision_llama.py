@@ -103,7 +103,7 @@ def _cross_layer_fwd(cfg, ctx):
                                  kv_x=patches, causal=False)
         x = x + jnp.tanh(lp["gate_attn"]) * h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
-                           ctx)
+                           ctx, path="super.cross.mlp")
         return x + jnp.tanh(lp["gate_mlp"]) * h
     return body
 
@@ -113,7 +113,8 @@ def forward(cfg: ModelConfig, params, batch, ctx: ParallelContext, *,
     """batch: {"tokens": (B, S), "patches": (B, vision_tokens, d)}."""
     patches = batch["patches"]
     x = cm.embed_tokens(cfg, params["embed"], batch["tokens"], ctx)
-    self_fwd = tfm._layer(cfg, ctx, window)
+    self_fwd = tfm._layer(cfg, ctx, window,
+                          mlp_path="super.self.mlp")
     cross_fwd = _cross_layer_fwd(cfg, ctx)
 
     def super_body(x, sp, _):
@@ -171,7 +172,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
                                     lc, pos, ctx, window=window)
         x = x + h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
-                           ctx)
+                           ctx, path="super.self.mlp")
         return (x + h).astype(carry_dtype), nc
 
     def super_body(x, xs):
@@ -185,7 +186,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
                        None)
         x = x + jnp.tanh(cp["gate_attn"]) * (out @ cp["xattn"]["wo"])
         h = cm.mlp_forward(cfg, cp["mlp"], cm.apply_norm(cfg, cp["ln2"], x),
-                           ctx)
+                           ctx, path="super.cross.mlp")
         x = x + jnp.tanh(cp["gate_mlp"]) * h
         return x.astype(carry_dtype), nsc
 

@@ -93,7 +93,7 @@ def encode(cfg: ModelConfig, params, frames, ctx: ParallelContext):
                                  causal=False)
         x = x + h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
-                           ctx)
+                           ctx, path="enc_layers.mlp")
         return x + h
 
     x = cm.scan_layers(body, x, params["enc_layers"], ctx)
@@ -110,7 +110,7 @@ def _dec_layer(cfg, ctx):
                                  kv_x=enc, causal=False)
         x = x + h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
-                           ctx)
+                           ctx, path="dec_layers.mlp")
         return x + h
     return body
 
@@ -186,7 +186,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
                        None)
         x = x + out @ xa["wo"]
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
-                           ctx)
+                           ctx, path="dec_layers.mlp")
         return (x + h).astype(carry_dtype), nc
 
     carry_dtype = x.dtype

@@ -4,9 +4,12 @@ One directory per deployment:
 
 * ``manifest.json`` — everything needed to validate a load: format
   version, arch id + config hash, the full ``ExecutionPolicy`` (scheme,
-  backend, dtypes, collective shorthand), the target TP degree,
-  per-pair layout metadata from the compiler stages, and the per-leaf
-  shard map (which dim of each checkpoint leaf was pre-split).
+  backend, dtypes, collective shorthand — for a per-layer
+  ``CollectivePlan`` the full ``per-layer:`` form, echoed structurally
+  under ``collective_plan`` and, when the autotuner chose it, scored
+  per site under ``collective_tuner``), the target TP degree, per-pair
+  layout metadata from the compiler stages, and the per-leaf shard map
+  (which dim of each checkpoint leaf was pre-split).
 * ``rank_NN.npz`` — per-rank planned pytrees (packed uint32 weights,
   perms, scales, static scheme fields) via the schema-embedding
   ``train/checkpoint.py`` format.
@@ -28,6 +31,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm.spec import CollectivePlan
 from repro.core.policy import ExecutionPolicy
 
 FORMAT_VERSION = 1
@@ -87,6 +91,17 @@ class DeploymentArtifact:
             "pairs": list(state.pair_meta),
             "leaf_shards": dict(state.leaf_shards),
         }
+        coll = state.policy.collective
+        if isinstance(coll, CollectivePlan):
+            # structural echo of the per-layer plan (the policy field
+            # above already carries the authoritative shorthand)
+            manifest["collective_plan"] = {
+                "entries": [[pat, spec.shorthand()]
+                            for pat, spec in coll.entries],
+                "default": coll.default.shorthand(),
+            }
+        if getattr(state, "tuner_report", ()):
+            manifest["collective_tuner"] = list(state.tuner_report)
         if extra:
             manifest = {**extra, **manifest}
         aux = ({"attn_plans": state.attn_plans}

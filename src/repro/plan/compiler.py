@@ -16,7 +16,11 @@ first token*.  This module is where that decision happens — once, offline
    ``cfg.quant.attn_tp_aware`` is set, plan the V->out_proj pairs with
    the head-block-constrained fold (``core/attention_fold.py``) into the
    artifact's aux tree.
-4. ``stage_shard``      — pre-split the planned pytree into per-rank
+4. ``autotune_collectives`` (``plan/tuner.py``, opt-in) — score every
+   registered full-output collective per pair site (analytic wire bytes
+   + a measured activation-error probe on calibration batches) and write
+   the chosen per-layer ``CollectivePlan`` into the policy.
+5. ``stage_shard``      — pre-split the planned pytree into per-rank
    row/column shards for the target TP degree, driven by the model's own
    ``param_specs`` (any leaf whose spec names the model axis is sliced;
    non-divisible leaves stay replicated and are recorded as such).
@@ -61,6 +65,7 @@ class PlanState:
     attn_plans: Any = None           # beyond-paper V->O folds (aux tree)
     rank_params: Optional[tuple] = None  # per-rank trees after stage_shard
     leaf_shards: Optional[dict] = None   # {leaf key: sliced dim | None}
+    tuner_report: tuple = ()         # per-pair collective scores (manifest)
 
 
 def _is_mlp_dict(node: Any) -> bool:
@@ -137,8 +142,10 @@ def stage_quantize(state: PlanState) -> PlanState:
         args = (w_up, w_down, rngs) if w_gate is None else (
             w_up, w_down, w_gate, rngs)
         bundle = _vmap_stacked(q_one, lead)(*args)
+        # dotted paths: the SAME string the runtime epilogues resolve
+        # their per-layer collective by (models pass it to mlp_forward)
         meta.append({
-            "path": "/".join(path), "stacked": list(w_up.shape[:lead]),
+            "path": ".".join(path), "stacked": list(w_up.shape[:lead]),
             "k1": int(w_up.shape[-2]), "n1": int(w_up.shape[-1]),
             "n2": int(w_down.shape[-1]), "gate": w_gate is not None,
             "group_size_up": gs_up, "group_size_down": gs_down,
@@ -216,7 +223,7 @@ def stage_fold_attention(state: PlanState) -> PlanState:
                     wv, wo, n_heads=hp, n_kv_heads=kvp, head_dim=hd,
                     group_size=gs, rng=r)
 
-            plans["/".join(path)] = _vmap_stacked(fold_one, lead)(
+            plans[".".join(path)] = _vmap_stacked(fold_one, lead)(
                 w_v, w_o, rngs)
             return
         if isinstance(node, dict):
@@ -366,12 +373,19 @@ def compile_plan(cfg: ModelConfig, raw_params: Any, *, tp: int,
                  rng: Optional[jax.Array] = None,
                  policy: Optional[ExecutionPolicy] = None,
                  seed: Optional[int] = None,
-                 extra_manifest: Optional[dict] = None):
+                 extra_manifest: Optional[dict] = None,
+                 autotune: bool = False,
+                 tune_budget: Optional[float] = None):
     """Full offline compile: raw fp params -> ``DeploymentArtifact``.
 
-    Runs every stage (quantize, layout, attention fold, TP pre-shard) and
-    freezes the result with its manifest.  ``seed`` is provenance only
-    (recorded so a served artifact can name the init stream it came from).
+    Runs every stage (quantize, layout, attention fold, optional
+    collective autotune, TP pre-shard) and freezes the result with its
+    manifest.  ``autotune=True`` inserts ``plan/tuner.py``'s
+    ``autotune_collectives`` (max rel-error ``tune_budget``; tuner
+    default when None) so the artifact carries a per-layer
+    ``CollectivePlan`` instead of one global collective.  ``seed`` is
+    provenance only (recorded so a served artifact can name the init
+    stream it came from).
     """
     from repro.plan.artifact import DeploymentArtifact
 
@@ -379,14 +393,23 @@ def compile_plan(cfg: ModelConfig, raw_params: Any, *, tp: int,
     state = PlanState(
         cfg=cfg, policy=policy, params=raw_params, tp=int(tp),
         rng=rng if rng is not None else jax.random.PRNGKey(0))
-    state = run_stages(state)
+    stages = [stage_quantize, stage_layout, stage_fold_attention]
+    if autotune:
+        from repro.plan import tuner
+
+        kw = {} if tune_budget is None else {"budget": tune_budget}
+        stages.append(lambda s: tuner.autotune_collectives(s, **kw))
+    stages.append(stage_shard)
+    state = run_stages(state, tuple(stages))
     return DeploymentArtifact.from_state(state, seed=seed,
                                          extra=extra_manifest)
 
 
 def prepare(cfg: ModelConfig, *, tp: int, seed: int = 0,
             policy: Optional[ExecutionPolicy] = None,
-            extra_manifest: Optional[dict] = None):
+            extra_manifest: Optional[dict] = None,
+            autotune: bool = False,
+            tune_budget: Optional[float] = None):
     """Seed -> artifact, the canonical prepare recipe.
 
     Derives the raw init and the plan rng exactly the way ``Model.init``
@@ -400,4 +423,5 @@ def prepare(cfg: ModelConfig, *, tp: int, seed: int = 0,
     raw = build_model(cfg).init_raw(key)
     return compile_plan(
         cfg, raw, tp=tp, rng=jax.random.fold_in(key, PLAN_RNG_STREAM),
-        policy=policy, seed=seed, extra_manifest=extra_manifest)
+        policy=policy, seed=seed, extra_manifest=extra_manifest,
+        autotune=autotune, tune_budget=tune_budget)

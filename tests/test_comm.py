@@ -92,7 +92,13 @@ def test_spec_validates_params():
     with pytest.raises(ValueError, match="4-bit"):
         CollectiveSpec(name="quant-int4", bits=8)
     with pytest.raises(ValueError, match="unknown wire dtype"):
-        CollectiveSpec.parse("cast:fp16")
+        CollectiveSpec.parse("cast:int7")
+    # CLI-friendly dtype aliases canonicalize (and shorthand() prints the
+    # full name, so parse round-trips through the canonical form)
+    assert CollectiveSpec.parse("cast:bf16") == CollectiveSpec.parse(
+        "cast:bfloat16")
+    assert CollectiveSpec.parse("cast:fp16").wire_dtype == \
+        jnp.dtype(jnp.float16)
     # hashable (lives inside the jit-static ExecutionPolicy)
     assert hash(CollectiveSpec.parse("quant-int8")) == hash(
         CollectiveSpec(name="quant-int8"))
@@ -134,9 +140,14 @@ def test_quant_int8_bytes_quarter_of_psum_at_tp8():
     quant = CollectiveSpec.parse("quant-int8").bytes_on_wire(shape, tp)
     assert quant / psum == pytest.approx((1 + 2 / 128) / 4)
     assert quant / psum <= 0.26
-    # the non-tiling fallback is honestly more expensive, never free
+    # non-tiling dims pay wire padding + coarser blocks, but stay on the
+    # same two-phase ring accounting (the old one-phase fallback charged
+    # payload*(tp-1) — tp/2 times the ring — which inflated vs_psum)
     odd = CollectiveSpec.parse("quant-int8").bytes_on_wire((8, 8193), tp)
     assert odd > quant
+    assert odd < quant * 1.1          # ring model: close to the tiling cost
+    ring = CollectiveSpec.parse("quant-int8").bytes_on_wire((8, 8200), tp)
+    assert odd == pytest.approx(ring)  # padded to the next tp multiple
 
 
 def test_quant_int4_bytes_eighth_of_psum_at_tp8():
@@ -147,9 +158,11 @@ def test_quant_int4_bytes_eighth_of_psum_at_tp8():
     quant = CollectiveSpec.parse("quant-int4").bytes_on_wire(shape, tp)
     assert quant / psum == pytest.approx((0.5 + 4 / 32) / 4)
     assert quant < CollectiveSpec.parse("quant-int8").bytes_on_wire(shape, tp)
-    # non-tiling output dims fall back to one-phase with nibble padding
+    # non-tiling output dims pad to whole uint32 words per chunk (tp * 8)
+    # and stay on the two-phase ring accounting
     odd = CollectiveSpec.parse("quant-int4").bytes_on_wire((8, 8193), tp)
     assert odd > quant
+    assert odd < quant * 1.35         # padding + coarser blocks, not (tp-1)x
 
 
 # ---------------------------------------------------------------------------
@@ -225,10 +238,10 @@ def test_collectives_vs_lax_primitives_under_shard_map():
     assert out.count("OK") == 7
 
 
-def test_quant_int8_non_tiling_fallback_and_pair_forward():
-    """quant-int8 on an output dim that does NOT tile TP (one-phase
-    all-gather fallback), plus the full PlannedPair TP forward for every
-    strategy against the single-device reference."""
+def test_quant_int8_non_tiling_padded_ring_and_pair_forward():
+    """quant-int8 on an output dim that does NOT tile TP (zero-padded on
+    the wire, same two-phase ring), plus the full PlannedPair TP forward
+    for every strategy against the single-device reference."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
@@ -245,8 +258,10 @@ def test_quant_int8_non_tiling_fallback_and_pair_forward():
             mesh=mesh, in_specs=P("model"),
             out_specs=P(None, None, None))(y)
         err = np.abs(np.asarray(out129) - ref).max() / np.abs(ref).max()
-        assert err < 8 * 1 / 127.0, err     # one quant round only
-        print("OK fallback", f"{err:.1e}")
+        # TP rank contributions each rounded once + the re-quantized
+        # reduction rounded once (padded two-phase ring numerics)
+        assert err < (8 + 1) * 2.0 ** (1 - 8), err
+        print("OK padded-ring", f"{err:.1e}")
 
         rng = jax.random.PRNGKey(0)
         r = jax.random.split(rng, 4)
@@ -275,7 +290,7 @@ def test_quant_int8_non_tiling_fallback_and_pair_forward():
 def test_quant_int4_packs_like_the_weights():
     """The int4 collective's wire payload reuses the weight quantizer's
     nibble packing (``pack_int4``): pack->unpack along the last dim is the
-    identity, and a non-tiling dim survives the padded fallback."""
+    identity, and a non-tiling dim survives the padded two-phase ring."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
@@ -299,7 +314,226 @@ def test_quant_int4_packs_like_the_weights():
             mesh=mesh, in_specs=P("model"),
             out_specs=P(None, None, None))(y)
         err = np.abs(np.asarray(got) - ref).max() / np.abs(ref).max()
-        assert err < 8 * 2.0 / 15.0, err     # one quant round per rank
-        print("OK int4-fallback", f"{err:.1e}")
+        # one quant round per rank + the phase-2 re-quantization
+        assert err < (8 + 1) * 2.0 / 15.0, err
+        print("OK int4-padded-ring", f"{err:.1e}")
     """)
     assert out.count("OK") == 2
+
+
+# ---------------------------------------------------------------------------
+# dtype contract (uniform across every registered strategy)
+# ---------------------------------------------------------------------------
+
+def test_tp1_is_noop_with_zero_bytes():
+    """At TP=1 every strategy is the identity (bit-exact, any dtype) and
+    its analytic wire cost is zero — runs on the single host device."""
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import compat
+
+    mesh = jax.make_mesh((1,), ("model",), devices=jax.devices()[:1])
+    for name in dispatch.strategies():
+        spec = CollectiveSpec.parse(name)
+        assert spec.bytes_on_wire((4, 96), 1) == 0.0
+        for dtype in (jnp.float32, jnp.bfloat16):
+            y = jax.random.normal(jax.random.PRNGKey(0), (4, 96)
+                                  ).astype(dtype)
+            out = compat.shard_map(
+                lambda v, spec=spec: dispatch.apply(v, "model", spec, None),
+                mesh=mesh, in_specs=P(), out_specs=P())(y)
+            assert out.dtype == dtype, (name, out.dtype)
+            np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                          np.asarray(y, np.float32))
+
+
+def test_dtype_contract_every_strategy_tp8():
+    """Output dtype == input dtype for EVERY strategy at TP=8, for f32
+    and bf16 partials alike — wire dtypes (bf16 words, int8/int4
+    payloads) must never leak into the caller's residual stream.  This
+    is the cast-collective bugfix: it used to return ``wire_dtype``."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.comm import CollectiveSpec, dispatch
+        from repro.core import compat
+
+        mesh = jax.make_mesh((8,), ("model",))
+        for name in dispatch.strategies():
+            spec = CollectiveSpec.parse(name)
+            out_last = "model" if dispatch.scatters_output(spec) else None
+            for dtype in (jnp.float32, jnp.bfloat16):
+                y = (jax.random.normal(jax.random.PRNGKey(0), (8, 4, 256))
+                     .astype(dtype))
+                got = compat.shard_map(
+                    lambda v: dispatch.apply(v, "model", spec, None),
+                    mesh=mesh, in_specs=P("model"),
+                    out_specs=P(None, None, out_last))(y)
+                assert got.dtype == dtype, (name, dtype, got.dtype)
+            print("OK dtype", name)
+    """)
+    assert out.count("OK dtype") == len(dispatch.strategies())
+
+
+def test_measured_bytes_match_analytic_model():
+    """The tightened measured-vs-analytic contract: per-device collective
+    bytes parsed from the lowered HLO equal ``bytes_on_wire`` EXACTLY for
+    psum / psum_scatter / quant-int8 / quant-int4 — on tiling AND
+    non-tiling output dims (the old one-phase fallback accounting is
+    gone; implementation and model are both the padded two-phase ring).
+    ``cast`` is exempt on CPU only: XLA promotes the bf16 all-reduce to
+    f32 there (measured = 2x model; the wire stays bf16 on TPU)."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.comm import CollectiveSpec, dispatch
+        from repro.core import compat
+        from repro.launch import roofline
+
+        mesh = jax.make_mesh((8,), ("model",))
+        for n in (4096, 129, 8193):
+            y = jax.random.normal(jax.random.PRNGKey(0), (8, 4, n))
+            for name in ("psum", "psum_scatter", "quant-int8", "quant-int4"):
+                spec = CollectiveSpec.parse(name)
+                if dispatch.scatters_output(spec) and n % 8:
+                    continue        # reduce_scatter needs a tiling dim
+                out_last = ("model" if dispatch.scatters_output(spec)
+                            else None)
+                fn = compat.shard_map(
+                    lambda v, spec=spec: dispatch.apply(
+                        v, "model", spec, None),
+                    mesh=mesh, in_specs=P("model"),
+                    out_specs=P(None, None, out_last))
+                txt = jax.jit(fn).lower(y).compile().as_text()
+                hlo = roofline.parse_collective_bytes(
+                    txt, chips=8)["total_per_device"]
+                model = spec.bytes_on_wire((4, n), 8)
+                rel = abs(hlo - model) / max(model, 1.0)
+                assert rel < 1e-6, (name, n, hlo, model)
+                print(f"OK bytes {name} n={n}")
+    """)
+    assert out.count("OK bytes") == 10
+
+
+# ---------------------------------------------------------------------------
+# per-layer CollectivePlan
+# ---------------------------------------------------------------------------
+
+def test_collective_plan_parse_roundtrip():
+    from repro.comm import CollectivePlan, parse_collective
+
+    short = ("per-layer:*.mlp=quant-int8:128,attn*=cast:bfloat16,"
+             "*=psum")
+    plan = CollectivePlan.parse(short)
+    assert plan.shorthand() == short
+    assert CollectivePlan.parse(plan.shorthand()) == plan
+    assert parse_collective(short) == plan
+    # dtype alias normalizes into the canonical shorthand
+    assert CollectivePlan.parse(
+        "per-layer:attn*=cast:bf16,*=psum").shorthand() == \
+        "per-layer:attn*=cast:bfloat16,*=psum"
+    # a bare spec parses as a zero-entry plan; plain shorthands stay specs
+    assert CollectivePlan.parse("quant-int8").default == \
+        CollectiveSpec.parse("quant-int8")
+    assert parse_collective("quant-int8") == CollectiveSpec.parse(
+        "quant-int8")
+    # hashable: lives on the jit-static ExecutionPolicy
+    assert hash(plan) == hash(CollectivePlan.parse(short))
+
+
+def test_collective_plan_resolve_globs_in_order():
+    from repro.comm import CollectivePlan
+
+    plan = CollectivePlan.parse(
+        "per-layer:layers.mlp=quant-int4,*.mlp=quant-int8,"
+        "*.experts=cast:float16,*=psum")
+    assert plan.resolve("layers.mlp").name == "quant-int4"   # first match
+    assert plan.resolve("super.self.mlp").name == "quant-int8"
+    assert plan.resolve("layers/moe/experts").name == "cast"  # "/" == "."
+    assert plan.resolve("layers.attn").name == "psum"
+    assert plan.resolve(None) == plan.default                # anonymous site
+    # suffix-friendly matching: a bare segment glob hits nested paths
+    assert plan.resolve("enc_layers.mlp").name == "quant-int8"
+    specs = plan.specs()
+    assert len(specs) == 4 and specs[-1] == plan.default
+
+
+def test_collective_plan_rejects_malformed_shorthand():
+    from repro.comm import CollectivePlan
+
+    with pytest.raises(ValueError, match="never match"):
+        CollectivePlan.parse("per-layer:*=psum,mlp=cast")
+    with pytest.raises(ValueError, match="glob.*=.*spec|not '<glob>"):
+        CollectivePlan.parse("per-layer:justaname")
+    with pytest.raises(ValueError, match="registered strategies"):
+        CollectivePlan.parse("per-layer:*.mlp=warp-speed,*=psum")
+
+
+def test_policy_accepts_plan_and_spec():
+    from repro.comm import CollectivePlan
+    from repro.core.policy import ExecutionPolicy
+
+    pol = ExecutionPolicy(
+        collective="per-layer:*.mlp=quant-int8:64,*=psum")
+    assert isinstance(pol.collective, CollectivePlan)
+    assert pol.collective.resolve("layers.mlp").block_size == 64
+    hash(pol)                       # still a valid jit static
+    # bare specs keep resolving to themselves, path or not
+    pol2 = ExecutionPolicy(collective="quant-int8:64")
+    assert pol2.collective.resolve("layers.mlp") == pol2.collective
+
+
+def test_per_layer_plan_resolves_per_pair_and_psum_is_bit_exact():
+    """Acceptance: a ``per-layer:*=psum`` plan is BIT-exact with the
+    global psum policy, and a mixed plan resolves different strategies
+    per pair path — verified structurally via the lowered HLO collective
+    counts (quant-int8 epilogue = all_to_all + all_gather phases; psum
+    epilogue = one all-reduce)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import reorder
+        from repro.core.policy import ExecutionPolicy
+        from repro.launch import roofline
+
+        rng = jax.random.PRNGKey(0)
+        r = jax.random.split(rng, 4)
+        k1, n1, n2, m = 128, 256, 128, 16
+        pp = reorder.plan_pair(
+            jax.random.normal(r[0], (k1, n1)),
+            jax.random.normal(r[2], (n1, n2)),
+            w_gate=jax.random.normal(r[1], (k1, n1)), scheme="tp-aware",
+            group_size_up=32, group_size_down=32, rng=rng)
+        x = jax.random.normal(r[3], (m, k1))
+        mesh = jax.make_mesh((8,), ("model",))
+
+        pol_psum = ExecutionPolicy(collective="psum")
+        pol_plan = ExecutionPolicy(collective="per-layer:*=psum")
+        with mesh:
+            y_g = np.asarray(pp.forward(x, pol_psum, mesh,
+                                        activation="silu",
+                                        pair_path="layers.mlp"))
+            y_p = np.asarray(pp.forward(x, pol_plan, mesh,
+                                        activation="silu",
+                                        pair_path="layers.mlp"))
+        np.testing.assert_array_equal(y_g, y_p)
+        print("OK per-layer-psum-bit-exact")
+
+        mixed = ExecutionPolicy(collective=
+            "per-layer:*.mlp=quant-int8:32,*=psum")
+        with mesh:
+            for path, want_kind in (("layers.mlp", "all-to-all"),
+                                    ("layers.attn", "all-reduce")):
+                fn = lambda xx, p, path=path: p.forward(
+                    xx, mixed, mesh, activation="silu", pair_path=path)
+                txt = jax.jit(fn).lower(x, pp).compile().as_text()
+                counts = roofline.parse_collective_bytes(
+                    txt, chips=8)["counts"]
+                assert counts[want_kind] > 0, (path, counts)
+                other = ("all-reduce" if want_kind == "all-to-all"
+                         else "all-to-all")
+                assert counts[other] == 0, (path, counts)
+                print("OK per-layer-hlo", path, want_kind)
+    """)
+    assert out.count("OK") == 3

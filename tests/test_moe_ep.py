@@ -72,3 +72,44 @@ def test_moe_ep_emits_all_to_all():
         print("OK", n)
     """)
     assert "OK" in out
+
+
+def test_moe_within_expert_collective_resolves_from_plan():
+    """The within-expert epilogue resolves "layers.moe.experts" from a
+    per-layer CollectivePlan like every other pair — a compressed
+    full-output strategy applies (bounded error), while ``none`` /
+    scatter strategies fall back to psum (the EP combine needs every
+    rank's complete expert output), bit-identical to the psum plan."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.core.policy import ExecutionPolicy
+        from repro.models.registry import build_model
+        from repro.models.common import ParallelContext
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = get_smoke_config("qwen3-moe-235b-a22b").with_(
+            capacity_factor=64.0)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = m.make_batch(jax.random.PRNGKey(1), 4, 16)
+
+        def run(coll):
+            ctx = ParallelContext(mesh=mesh, batch_axes=("data",),
+                                  policy=ExecutionPolicy(collective=coll))
+            with mesh:
+                return np.asarray(jax.jit(
+                    lambda p, b: m.forward(p, b, ctx))(
+                        params, batch).astype(jnp.float32))
+
+        y_psum = run("psum")
+        y_none = run("per-layer:*.experts=none,*=psum")
+        np.testing.assert_array_equal(y_psum, y_none)
+        print("OK none-falls-back-to-psum")
+
+        y_q = run("per-layer:*.experts=quant-int8:32,*=psum")
+        err = np.abs(y_q - y_psum).max() / (np.abs(y_psum).max() + 1e-6)
+        assert 0 < err < 5e-2, err    # compressed wire genuinely applied
+        print("OK quantized-within-expert", f"{err:.1e}")
+    """)
+    assert out.count("OK") == 2

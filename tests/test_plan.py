@@ -255,3 +255,102 @@ def test_artifact_manifest_contents(tmp_path):
     assert pair["scheme"] == "tp-aware"
     assert pair["k1"] == cfg.d_model and pair["n1"] == cfg.d_ff
     assert pair["gate"] is True and pair["stacked"] == [cfg.num_layers]
+
+
+# ---------------------------------------------------------------------------
+# per-layer CollectivePlan through the artifact lifecycle
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_heterogeneous_collective_plan(tmp_path):
+    """A per-layer plan with distinct collectives survives
+    prepare -> save -> load: the manifest echoes it both as the policy
+    shorthand and structurally, ``art.policy()`` reconstructs the same
+    frozen plan, and ``validate`` refuses a mismatched plan/policy."""
+    from repro.comm import CollectivePlan
+
+    short = "per-layer:*.mlp=quant-int8:64,attn*=cast:float16,*=psum"
+    cfg = _smoke_cfg().with_quant(collective=short)
+    art_dir = str(tmp_path / "het")
+    _prepare(cfg, tp=2).save(art_dir)
+    art = DeploymentArtifact.load(art_dir)
+
+    man = art.manifest
+    assert man["policy"]["collective"] == short
+    assert man["collective_plan"] == {
+        "entries": [["*.mlp", "quant-int8:64"],
+                    ["attn*", "cast:float16"]],
+        "default": "psum",
+    }
+    shorts = {s for _, s in man["collective_plan"]["entries"]}
+    shorts.add(man["collective_plan"]["default"])
+    assert len(shorts) >= 2         # genuinely heterogeneous
+
+    pol = art.policy()
+    assert isinstance(pol.collective, CollectivePlan)
+    assert pol.collective == CollectivePlan.parse(short)
+    assert pol.collective.resolve("layers.mlp").block_size == 64
+    art.validate(cfg=cfg, policy=pol, tp=2)
+    # a bare-spec policy is NOT the per-layer plan it was compiled for
+    with pytest.raises(PlanMismatchError, match="policy"):
+        art.validate(policy=pol.with_(collective="psum"))
+    with pytest.raises(PlanMismatchError, match="policy"):
+        art.validate(policy=pol.with_(
+            collective="per-layer:*.mlp=quant-int8:128,*=psum"))
+
+
+def test_autotune_compiles_collective_plan(tmp_path):
+    """``prepare(autotune=True)`` scores every full-output strategy per
+    pair site and freezes a per-layer ``CollectivePlan`` into the
+    artifact: the manifest carries >=2 distinct collectives (the tuned
+    site + the psum default), the tuner report names every candidate's
+    bytes/error, and the served policy round-trips the plan."""
+    from repro.comm import CollectivePlan
+
+    cfg = _smoke_cfg()
+    art = compiler.prepare(cfg, tp=2, seed=0, autotune=True,
+                           extra_manifest={"smoke": True})
+    man = art.manifest
+    plan = man["collective_plan"]
+    assert plan["default"] == "psum"
+    assert [p for p, _ in plan["entries"]] == [m["path"]
+                                               for m in man["pairs"]]
+    distinct = {s for _, s in plan["entries"]} | {plan["default"]}
+    assert len(distinct) >= 2, plan
+
+    (site,) = man["collective_tuner"]
+    assert site["path"] == "layers.mlp" and site["status"] == "tuned"
+    assert site["chosen"] in dict(
+        (s, None) for _, s in plan["entries"]).keys()
+    # every candidate was scored with both axes of the trade-off
+    assert {"psum"} <= set(site["candidates"])
+    for v in site["candidates"].values():
+        assert v["rel_err"] >= 0 and v["bytes_per_token"] >= 0
+    # the chosen collective actually compresses vs the psum baseline
+    cand = site["candidates"]
+    assert cand[site["chosen"]]["bytes_per_token"] < \
+        cand["psum"]["bytes_per_token"]
+
+    # round-trip through disk, then validate against the tuned policy
+    art_dir = str(tmp_path / "tuned")
+    art.save(art_dir)
+    loaded = DeploymentArtifact.load(art_dir)
+    pol = loaded.policy()
+    assert isinstance(pol.collective, CollectivePlan)
+    loaded.validate(cfg=cfg, policy=pol, tp=2)
+    with pytest.raises(PlanMismatchError, match="policy"):
+        # the pre-tune (global psum) policy is not the compiled plan
+        loaded.validate(policy=ExecutionPolicy.from_config(cfg))
+
+
+def test_autotune_respects_budget():
+    """budget=0 forbids every lossy collective -> psum everywhere;
+    a huge budget picks the cheapest wire (int4) for the mlp site."""
+    cfg = _smoke_cfg()
+    tight = compiler.prepare(cfg, tp=2, seed=0, autotune=True,
+                             tune_budget=0.0)
+    assert all(s == "psum" for _, s in
+               tight.manifest["collective_plan"]["entries"])
+    loose = compiler.prepare(cfg, tp=2, seed=0, autotune=True,
+                             tune_budget=10.0)
+    chosen = dict(loose.manifest["collective_plan"]["entries"])
+    assert chosen["layers.mlp"].startswith("quant-int4")
