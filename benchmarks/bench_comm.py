@@ -41,7 +41,9 @@ from benchmarks.bench_mlp import _mesh, _plan, _collective_bytes
 
 
 def _scheme_table(out_lines: list, m: int):
-    print("# bench_comm: per-device ICI bytes by scheme (M=8)")
+    title = "# bench_comm: per-device ICI bytes by scheme (M=8)"
+    print(title)
+    out_lines.append(title)
     header = ("problem,TP,scheme,allgather_B,allreduce_B,total_B,"
               "vs_tpaware")
     print(header)
@@ -85,7 +87,9 @@ def _strategy_table(out_lines: list, m: int):
     For ``cast`` the CPU backend promotes the bf16 all-reduce to f32
     (hlo_vs_model = 1.0) — on TPU the wire stays bf16, which is what
     the model column accounts."""
-    print("# bench_comm: trailing collective by strategy (M=8, tp-aware)")
+    title = "# bench_comm: trailing collective by strategy (M=8, tp-aware)"
+    print(title)
+    out_lines.append(title)
     header = ("problem,TP,collective,hlo_B,model_B,hlo_vs_model,"
               "vs_psum,rel_err")
     print(header)
@@ -148,7 +152,9 @@ def _per_layer_table(out_lines: list, m: int):
     plan = CollectivePlan.parse(PER_LAYER_PLAN)
     pol = ExecutionPolicy(scheme="tp-aware", backend="jnp",
                           compute_dtype=jnp.float32, collective=plan)
-    print(f"# bench_comm: per-layer collective plan ({PER_LAYER_PLAN})")
+    title = f"# bench_comm: per-layer collective plan ({PER_LAYER_PLAN})"
+    print(title)
+    out_lines.append(title)
     header = ("problem,TP,pair_path,resolved,hlo_B,model_B,hlo_counts")
     print(header)
     out_lines.append(header)

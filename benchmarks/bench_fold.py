@@ -18,7 +18,9 @@ from repro.launch import roofline
 
 
 def run(out_lines: list):
-    print("# bench_fold: attention V->O fold (beyond paper)")
+    title = "# bench_fold: attention V->O fold (beyond paper)"
+    print(title)
+    out_lines.append(title)
     header = "metric,config,value"
     print(header)
     out_lines.append(header)

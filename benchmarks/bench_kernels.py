@@ -32,7 +32,9 @@ def metadata_traffic(k, n, gs, bm, bn, bk, m, *, ordered: bool) -> int:
 
 
 def run(out_lines: list):
-    print("# bench_kernels: metadata VMEM traffic, ordered vs g_idx")
+    title = "# bench_kernels: metadata VMEM traffic, ordered vs g_idx"
+    print(title)
+    out_lines.append(title)
     header = ("M,K,N,gs,layout,meta_bytes,ratio,interp_wall_ms")
     print(header)
     out_lines.append(header)

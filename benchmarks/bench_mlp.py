@@ -67,8 +67,12 @@ def tpu_model_time(m, k1, n1, n2, tp, coll_per_dev):
 
 
 def run(out_lines: list):
-    print("# bench_mlp: paper problem sizes, Naive(Alg.2) vs TP-Aware(Alg.3)")
-    print(f"# devices: {len(jax.devices())}")
+    title = "# bench_mlp: paper problem sizes, Naive(Alg.2) vs TP-Aware(Alg.3)"
+    print(title)
+    out_lines.append(title)
+    title = f"# devices: {len(jax.devices())}"
+    print(title)
+    out_lines.append(title)
     header = ("problem,M,TP,scheme,wall_us,coll_bytes_per_dev,"
               "tpu_model_ms,tpu_model_speedup")
     print(header)

@@ -25,7 +25,9 @@ from repro.train import data as data_lib, optimizer as opt, trainstep
 
 
 def run(out_lines: list):
-    print("# bench_quality: eval loss, dense vs int4 deployment schemes")
+    title = "# bench_quality: eval loss, dense vs int4 deployment schemes"
+    print(title)
+    out_lines.append(title)
     header = "config,eval_loss,delta_vs_dense"
     print(header)
     out_lines.append(header)

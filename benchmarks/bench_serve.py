@@ -1,0 +1,249 @@
+import os
+import sys
+
+# TP sweeps need >1 host device; 8 matches the other benches (run.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+"""Serving load generator: Poisson arrivals against the live HTTP/SSE
+front end (DESIGN.md §8), sweeping arrival rate x TP degree.
+
+For each (tp, rate) point it fires ``n`` requests with exponential
+inter-arrival times at a real ``ServingServer`` (the same stack
+``launch.serve --http`` runs), streams every SSE response, and reports:
+
+* **TTFT** p50/p99 — POST sent -> first ``token`` event (queue wait +
+  prefill replay included: this is what a client sees);
+* **ITL** p50/p99 — gap between consecutive ``token`` events of one
+  request;
+* **throughput** — completed tokens / wall-clock of the sweep;
+* **rejected** — 429 backpressure responses (the admission queue is
+  deliberately small enough for the saturated rate to shed load).
+
+Results land in ``BENCH_serve.json`` at the repo root via
+``benchmarks/snapshot.py`` (git SHA + config + metrics) so the serving
+perf trajectory is tracked across PRs.
+
+  PYTHONPATH=src python benchmarks/bench_serve.py [--quick]
+      [--rates 2,8,32] [--tp 1,2] [--requests 40]
+"""
+
+import argparse
+import http.client
+import json
+import threading
+import time
+
+import numpy as np
+
+from benchmarks import snapshot
+
+ARCH = "qwen3-4b"
+PROMPT_MIX = (4, 24)        # uniform prompt-length range
+MAX_NEW_MIX = (4, 8, 16)    # cycled output lengths
+MAX_BATCH = 4
+QUEUE_CAPACITY = 16
+PROMPT_BUDGET = 32
+
+
+def _make_server(tp: int, seed: int = 0):
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.policy import ExecutionPolicy
+    from repro.launch import mesh as mesh_lib
+    from repro.models.common import ParallelContext, REPLICATED
+    from repro.runtime.sampling import SamplingConfig
+    from repro.runtime.serve import make_engine
+    from repro.serving import ServingServer
+
+    cfg = get_smoke_config(ARCH).with_quant(mode="mlp", scheme="tp-aware")
+    policy = ExecutionPolicy.from_config(cfg)
+    if tp > 1:
+        mesh = mesh_lib.make_host_mesh(model=tp)
+        ctx = ParallelContext(mesh=mesh, batch_axes=("data",),
+                              policy=policy)
+    else:
+        ctx = REPLICATED
+    engine = make_engine(cfg, jax.random.PRNGKey(seed), ctx=ctx,
+                         max_seq=PROMPT_BUDGET + max(MAX_NEW_MIX) + 1,
+                         policy=policy)
+    srv = ServingServer(engine, max_batch=MAX_BATCH,
+                        prompt_budget=PROMPT_BUDGET,
+                        scfg=SamplingConfig(temperature=0.0),
+                        seed=seed, queue_capacity=QUEUE_CAPACITY,
+                        retry_after=0.5)
+    return cfg, srv.start()
+
+
+def _stream_one(port: int, body: dict) -> dict:
+    """POST one request, stream its SSE response, time every event."""
+    rec = {"status": None, "tokens": 0, "ttft_ms": None, "itl_ms": []}
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=600)
+    t0 = time.monotonic()
+    try:
+        conn.request("POST", "/v1/generate", json.dumps(body),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        rec["status"] = resp.status
+        if resp.status != 200:
+            resp.read()
+            return rec
+        last = None
+        for line in resp:
+            if not line.startswith(b"data: "):
+                continue
+            payload = json.loads(line[6:])
+            if "token" in payload:
+                now = time.monotonic()
+                if last is None:
+                    rec["ttft_ms"] = 1e3 * (now - t0)
+                else:
+                    rec["itl_ms"].append(1e3 * (now - last))
+                last = now
+                rec["tokens"] += 1
+            elif "usage" in payload:
+                rec["usage"] = payload["usage"]
+    finally:
+        conn.close()
+    return rec
+
+
+def _sweep(port: int, *, rate_rps: float, n: int, vocab: int,
+           seed: int) -> dict:
+    """Fire ``n`` Poisson arrivals at ``rate_rps``; aggregate client-side
+    latency."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+    bodies = []
+    for i in range(n):
+        plen = int(rng.integers(*PROMPT_MIX))
+        bodies.append({
+            "prompt": rng.integers(0, vocab, size=plen).tolist(),
+            "max_new_tokens": int(MAX_NEW_MIX[i % len(MAX_NEW_MIX)]),
+            "temperature": 0.8, "top_p": 0.95, "seed": i,
+        })
+    records: list = [None] * n
+
+    def client(i):
+        records[i] = _stream_one(port, bodies[i])
+
+    t0 = time.monotonic()
+    threads = []
+    for i in range(n):
+        delay = arrivals[i] - (time.monotonic() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        th = threading.Thread(target=client, args=(i,))
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join()
+    wall = time.monotonic() - t0
+
+    done = [r for r in records if r and r["status"] == 200]
+    rejected = sum(1 for r in records if r and r["status"] == 429)
+    ttft = [r["ttft_ms"] for r in done if r["ttft_ms"] is not None]
+    itl = [x for r in done for x in r["itl_ms"]]
+    tokens = sum(r["tokens"] for r in done)
+
+    def pct(xs, p):
+        return round(float(np.percentile(xs, p)), 2) if xs else None
+
+    return {
+        "rate_rps": rate_rps, "offered": n, "completed": len(done),
+        "rejected_429": rejected, "wall_s": round(wall, 2),
+        "tok_per_s": round(tokens / wall, 2) if wall else None,
+        "ttft_ms": {"p50": pct(ttft, 50), "p99": pct(ttft, 99)},
+        "itl_ms": {"p50": pct(itl, 50), "p99": pct(itl, 99)},
+    }
+
+
+def bench(rates, tps, n, *, seed: int = 0, out_lines=None):
+    lines = out_lines if out_lines is not None else []
+    header = ("tp,rate_rps,offered,completed,rejected_429,"
+              "ttft_p50_ms,ttft_p99_ms,itl_p50_ms,itl_p99_ms,tok_per_s")
+    print("# bench_serve: Poisson load vs the live HTTP/SSE front end "
+          f"(arch={ARCH} smoke, max_batch={MAX_BATCH}, "
+          f"queue={QUEUE_CAPACITY})")
+    print(header)
+    lines.append(header)
+    sweeps = []
+    for tp in tps:
+        cfg, srv = _make_server(tp, seed)
+        try:
+            # warm-up: absorb decode-program compilation outside the
+            # measured sweeps
+            _stream_one(srv.port, {"prompt": [1, 2, 3],
+                                   "max_new_tokens": 2})
+            for rate in rates:
+                s = _sweep(srv.port, rate_rps=rate, n=n,
+                           vocab=cfg.vocab_size, seed=seed)
+                s["tp"] = tp
+                sweeps.append(s)
+                row = (f"{tp},{rate:g},{s['offered']},{s['completed']},"
+                       f"{s['rejected_429']},{s['ttft_ms']['p50']},"
+                       f"{s['ttft_ms']['p99']},{s['itl_ms']['p50']},"
+                       f"{s['itl_ms']['p99']},{s['tok_per_s']}")
+                print(row)
+                lines.append(row)
+            stats = srv.loop.stats()
+        finally:
+            srv.shutdown(drain=False, timeout=10.0)
+        sweeps[-1]["server_stats_after"] = {
+            "requests": stats["requests"], "queue": stats["queue"]}
+    return sweeps
+
+
+def run(out_lines: list, *, quick: bool = True):
+    """run.py entry: quick sweep (tp=1 only) so the suite stays fast."""
+    sweeps = bench((4.0, 16.0), (1,), 8, out_lines=out_lines)
+    _write_snapshot(sweeps, quick=True)
+
+
+def _write_snapshot(sweeps, *, quick: bool) -> str:
+    path = snapshot.write("serve", config={
+        "arch": ARCH, "smoke": True, "scheme": "tp-aware",
+        "max_batch": MAX_BATCH, "queue_capacity": QUEUE_CAPACITY,
+        "prompt_budget": PROMPT_BUDGET,
+        "prompt_mix": list(PROMPT_MIX), "max_new_mix": list(MAX_NEW_MIX),
+        "sampling": {"temperature": 0.8, "top_p": 0.95,
+                     "seed": "per-request"},
+        "quick": quick,
+    }, metrics={"sweeps": sweeps})
+    print(f"wrote {path}")
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tp=1, two rates, few requests (CI smoke)")
+    ap.add_argument("--rates", default=None,
+                    help="comma-separated arrival rates in req/s "
+                         "(default 2,8,32; quick: 4,16)")
+    ap.add_argument("--tp", default=None,
+                    help="comma-separated TP degrees (default 1,2; "
+                         "quick: 1)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per sweep point (default 40; "
+                         "quick: 8)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rates = (tuple(float(r) for r in args.rates.split(","))
+             if args.rates else ((4.0, 16.0) if args.quick
+                                 else (2.0, 8.0, 32.0)))
+    tps = (tuple(int(t) for t in args.tp.split(","))
+           if args.tp else ((1,) if args.quick else (1, 2)))
+    n = args.requests or (8 if args.quick else 40)
+
+    sweeps = bench(rates, tps, n, seed=args.seed)
+    _write_snapshot(sweeps, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

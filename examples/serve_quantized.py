@@ -11,7 +11,9 @@ GPTQ, no ``plan_pair`` at startup — the manifest guarantees the plan
 matches the config, policy, and mesh.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py [--arch qwen3-4b]
-      (add --one-shot to compile in memory instead, the old flow)
+      (add --one-shot to compile in memory instead, the old flow;
+       add --http to front the same engine with the streaming HTTP/SSE
+       server from DESIGN.md §8 and replay the requests over the wire)
 """
 
 import os
@@ -61,6 +63,10 @@ def main():
     ap.add_argument("--one-shot", action="store_true",
                     help="compile the plan in memory at startup instead "
                          "of the prepare/serve two-step")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over the HTTP/SSE front end (ephemeral "
+                         "port) and stream the requests as SSE events "
+                         "instead of driving the scheduler directly")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).with_quant(mode="mlp",
@@ -101,6 +107,8 @@ def main():
     with mesh:
         engine = make_engine(cfg, jax.random.PRNGKey(0), ctx=ctx,
                              max_seq=48, policy=policy, artifact=artifact)
+        if args.http:
+            return _serve_http(engine, cfg, args)
         sched = Scheduler(engine, max_batch=4, prompt_budget=16,
                           scfg=SamplingConfig(temperature=0.7, top_k=40))
         rng = np.random.default_rng(0)
@@ -121,6 +129,65 @@ def main():
     print(f"\n{len(done)} requests ({mid} admitted mid-stream), "
           f"{tokens} new tokens, {dt:.1f}s "
           f"({tokens / dt:.1f} tok/s on CPU interpret)")
+
+
+def _serve_http(engine, cfg, args):
+    """Front the engine with the SSE server and replay the synthetic
+    requests over real HTTP connections (one thread per client)."""
+    import http.client
+    import json
+    import threading
+
+    from repro.runtime.sampling import SamplingConfig
+    from repro.serving import ServingServer
+
+    srv = ServingServer(engine, max_batch=4, prompt_budget=16,
+                        scfg=SamplingConfig(temperature=0.7, top_k=40),
+                        queue_capacity=8).start()
+    print(f"HTTP/SSE front end on http://127.0.0.1:{srv.port} "
+          "(POST /v1/generate, GET /v1/health, GET /v1/stats)")
+    rng = np.random.default_rng(0)
+    bodies = []
+    for i in range(args.requests):
+        plen = int(rng.integers(3, 16))
+        bodies.append({"prompt": rng.integers(0, cfg.vocab_size,
+                                              size=plen).tolist(),
+                       "max_new_tokens": args.max_new, "seed": i})
+    t0 = time.time()
+
+    def one(i):
+        body = bodies[i]
+        plen = len(body["prompt"])
+        conn = http.client.HTTPConnection("127.0.0.1", srv.port,
+                                          timeout=300)
+        conn.request("POST", "/v1/generate", json.dumps(body),
+                     {"Content-Type": "application/json"})
+        toks = []
+        for line in conn.getresponse():
+            if line.startswith(b"data: "):
+                payload = json.loads(line[6:])
+                if "token" in payload:
+                    toks.append(payload["token"])
+                elif "usage" in payload:
+                    u = payload["usage"]
+                    print(f"  req {i}: prompt[{plen:2d}] -> {toks} "
+                          f"(ttft {u['ttft_ms']:.0f}ms)")
+        conn.close()
+        return len(toks)
+
+    threads = [threading.Thread(target=one, args=(i,))
+               for i in range(args.requests)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stats = srv.loop.stats()
+    srv.shutdown()
+    dt = time.time() - t0
+    tok = stats["tokens"]["generated"]
+    print(f"\n{stats['requests']['completed']} requests over HTTP, "
+          f"{tok} new tokens, {dt:.1f}s ({tok / dt:.1f} tok/s), "
+          f"ttft p50 {stats['latency_ms']['ttft'].get('p50')}ms")
 
 
 if __name__ == "__main__":

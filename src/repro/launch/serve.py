@@ -1,6 +1,6 @@
 """Serving entrypoint: quantized deployment with the paper's schemes.
 
-Two lifecycles:
+Three lifecycles:
 
 * one-shot (compile in memory at startup):
 
@@ -19,6 +19,17 @@ Two lifecycles:
   never invokes GPTQ or the layout planner — the manifest is validated
   against the reconstructed config/policy/mesh so a stale or mismatched
   plan refuses to serve instead of silently computing the wrong thing.
+
+* network front end (``repro.serving``, DESIGN.md §8) — instead of the
+  built-in synthetic request batch, expose the engine over HTTP/SSE:
+
+    PYTHONPATH=src python -m repro.launch.serve --artifact /tmp/plan \
+        --tp 2 --http :8100
+    curl -N localhost:8100/v1/generate -d '{"text": "hi", \
+        "max_new_tokens": 8}'
+
+  Ctrl-C drains: the admission queue closes (new requests get 503),
+  in-flight requests finish, then the server exits.
 """
 
 from __future__ import annotations
@@ -165,6 +176,14 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--http", default=None, metavar="[HOST]:PORT",
+                    help="serve over HTTP/SSE instead of the built-in "
+                         "synthetic batch: POST /v1/generate streams "
+                         "token events, GET /v1/health, GET /v1/stats "
+                         "(':0' binds an ephemeral port)")
+    ap.add_argument("--queue-capacity", type=int, default=64,
+                    help="admission queue bound; a full wait line "
+                         "answers 429 + Retry-After (HTTP mode)")
     args = ap.parse_args(argv)
 
     if args.artifact:
@@ -194,6 +213,27 @@ def main(argv=None):
     max_seq = args.prompt_budget + args.max_new + 1
     engine = make_engine(cfg, jax.random.PRNGKey(args.seed), ctx=ctx,
                          max_seq=max_seq, policy=policy, artifact=artifact)
+
+    if args.http is not None:
+        from repro.serving import ServingServer
+
+        host, _, port = args.http.rpartition(":")
+        srv = ServingServer(
+            engine, host=host or "127.0.0.1", port=int(port or 0),
+            max_batch=args.max_batch, prompt_budget=args.prompt_budget,
+            scfg=SamplingConfig(temperature=args.temperature, top_k=40),
+            seed=args.seed, queue_capacity=args.queue_capacity)
+        src = (f"artifact={args.artifact}" if args.artifact
+               else "in-memory plan")
+        print(f"serving {cfg.arch_id} on http://{srv.address[0]}:"
+              f"{srv.port} [scheme={policy.scheme} "
+              f"backend={policy.backend} "
+              f"collective={policy.collective.shorthand()} tp={tp} "
+              f"max_batch={args.max_batch} "
+              f"queue={args.queue_capacity} {src}]", flush=True)
+        srv.serve_forever()
+        return
+
     sched = Scheduler(engine, max_batch=args.max_batch,
                       prompt_budget=args.prompt_budget,
                       scfg=SamplingConfig(temperature=args.temperature,

@@ -1,4 +1,4 @@
-"""Batched request scheduler for the serving example.
+"""Batched request scheduler for the serving runtime.
 
 Continuous-batching-lite: requests arrive with arbitrary prompt lengths;
 the scheduler packs up to ``max_batch`` of them into one fixed-shape
@@ -15,10 +15,33 @@ Two drain modes:
   step boundary — prompt replay and generation are the same decode loop,
   so admission never stalls the other slots.  Numerics per request are
   bit-identical to running it alone (the causal mask hides every other
-  slot's cache rows).
+  slot's cache rows).  This mode is incremental: ``step()`` runs exactly
+  one admission + decode step and reports what happened as
+  ``StepEvent``s, which is what the serving front end
+  (``repro.serving``) builds its streaming loop on; ``run()`` just
+  steps until the queue drains.
 * **batch-drain** (legacy fallback, audio/vlm): popleft up to
   ``max_batch`` requests, run them to completion via ``Engine.generate``
   (those families need the batch-global cross-attention prefill).
+  Per-request sampling overrides are a continuous-mode feature; this
+  path samples with the scheduler-global config.
+
+**One scheduler serves one family.**  Continuous and batch-drain
+requests cannot interleave inside one queue: a batch-drain wave holds
+every lane until its slowest request finishes, so a mixed queue would
+silently serialize the continuous traffic behind it.  ``submit``
+therefore rejects any request whose declared ``family`` differs from
+the engine's — run one ``Scheduler`` (and one engine) per family and
+split traffic upstream.
+
+Per-request sampling: ``Request`` carries optional ``temperature`` /
+``top_p`` / ``seed`` overriding the scheduler-global ``SamplingConfig``
+(``top_k`` stays global).  Each slot owns an independent PRNG chain
+seeded from the request (``seed`` if given, else the scheduler seed
+folded with the rid), advanced only on emission steps — so a request's
+tokens are bit-identical to a solo ``Engine.generate(PRNGKey(seed),
+...)`` run with the same params, no matter which other requests share
+the batch.
 """
 
 from __future__ import annotations
@@ -40,8 +63,29 @@ class Request:
     rid: int
     prompt: np.ndarray             # (L,) int32
     max_new_tokens: int = 16
+    # per-request sampling overrides (None -> the scheduler's global
+    # SamplingConfig value); ``seed`` pins this request's sample stream
+    # so its output is reproducible independent of batch composition
+    temperature: Optional[float] = None
+    top_p: Optional[float] = None
+    seed: Optional[int] = None
+    # declared model family; None means "the engine's own".  Anything
+    # else is rejected at submit (one scheduler per family — see module
+    # docstring).
+    family: Optional[str] = None
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    cancelled: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class StepEvent:
+    """What one decode step did to one request (continuous mode)."""
+
+    rid: int
+    token: Optional[int]           # None for a pure retire (cancel)
+    final: bool                    # request left the engine this step
+    cancelled: bool = False
 
 
 @dataclasses.dataclass
@@ -49,6 +93,7 @@ class _Slot:
     """One live lane of the fixed-shape decode program."""
 
     req: Request
+    key: jax.Array                 # this request's private sample stream
     fed: int = 0                   # tokens fed so far == this slot's pos
     last: int = 0                  # last sampled token (next input when
                                    # the prompt is exhausted)
@@ -63,14 +108,28 @@ class Scheduler:
         self.max_batch = max_batch
         self.prompt_budget = prompt_budget
         self.scfg = scfg
+        self.seed = seed
         self.queue: deque[Request] = deque()
         self.finished: dict[int, Request] = {}
-        self.rng = jax.random.PRNGKey(seed)
+        self.rng = jax.random.PRNGKey(seed)   # batch-drain global chain
         #: (step, rid) log of admissions — step > 0 entries are requests
         #: admitted into retired slots *between* decode steps.
         self.admissions: list[tuple[int, int]] = []
+        # continuous-mode engine state, built lazily on the first step
+        self._cache = None
+        self._slots: list[Optional[_Slot]] = []
+        self._step_no = 0
 
     def submit(self, req: Request):
+        family = self.engine.model.cfg.family
+        if req.family is not None and req.family != family:
+            raise ValueError(
+                f"request {req.rid} is for family '{req.family}' but this "
+                f"scheduler's engine serves '{family}': continuous and "
+                "batch-drain families cannot share a queue (a batch-drain "
+                "wave would hold every lane until its slowest request "
+                "finishes, silently serializing the continuous traffic "
+                "behind it) — run one Scheduler per family")
         if req.prompt.size > self.prompt_budget:
             raise ValueError(
                 f"prompt {req.prompt.size} > budget {self.prompt_budget}")
@@ -80,10 +139,35 @@ class Scheduler:
                 f"> engine max_seq {self.engine.max_seq}")
         self.queue.append(req)
 
+    def cancel(self, rid: int) -> bool:
+        """Retire a request: a queued one is dropped immediately, a live
+        one at the next step boundary (its slot then frees for
+        admission).  Returns False for unknown/already-finished rids."""
+        for req in self.queue:
+            if req.rid == rid and not req.cancelled:
+                req.cancelled = True
+                return True
+        for slot in self._slots:
+            if (slot is not None and slot.req.rid == rid
+                    and not slot.req.cancelled):
+                slot.req.cancelled = True
+                return True
+        return False
+
+    @property
+    def live_slots(self) -> int:
+        return sum(1 for s in self._slots if s is not None)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.live_slots > 0
+
     def run(self) -> dict[int, Request]:
         """Drain the queue; returns {rid: finished request}."""
         if self.engine.supports_continuous:
-            return self._run_continuous()
+            while self.has_work:
+                self.step()
+            return self.finished
         while self.queue:
             batch = [self.queue.popleft()
                      for _ in range(min(self.max_batch, len(self.queue)))]
@@ -94,51 +178,115 @@ class Scheduler:
     # continuous mode: admit into retired slots between decode steps
     # ------------------------------------------------------------------
 
-    def _run_continuous(self) -> dict[int, Request]:
+    def _request_key(self, req: Request) -> jax.Array:
+        if req.seed is not None:
+            return jax.random.PRNGKey(req.seed)
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), req.rid)
+
+    def step(self) -> list[StepEvent]:
+        """One admission + decode step over the fixed-shape program.
+
+        Returns a ``StepEvent`` per request that emitted a token or was
+        retired this step.  Safe to call with an empty engine (returns
+        ``[]`` without touching the device).
+        """
+        if not self.engine.supports_continuous:
+            raise RuntimeError(
+                f"family '{self.engine.model.cfg.family}' does not support "
+                "token-granularity stepping (batch-drain only) — use run()")
         b = self.max_batch
-        cache = self.engine.init_cache(b)
-        slots: list[Optional[_Slot]] = [None] * b
-        decode = self.engine._decode
-        params = self.engine.params
-        step = 0
+        if self._cache is None:
+            self._cache = self.engine.init_cache(b)
+            self._slots = [None] * b
+        slots = self._slots
+        events: list[StepEvent] = []
 
-        while self.queue or any(slots):
-            # admission: every retired (or never-used) slot takes the next
-            # queued request NOW — between decode steps, not after a wave.
-            for i in range(b):
-                if slots[i] is None and self.queue:
-                    slots[i] = _Slot(req=self.queue.popleft())
-                    self.admissions.append((step, slots[i].req.rid))
+        # cancellation: purge queued + retire live cancelled requests at
+        # the step boundary, freeing their slots for admission below
+        if any(r.cancelled for r in self.queue):
+            kept: deque[Request] = deque()
+            for req in self.queue:
+                if req.cancelled:
+                    req.done = True
+                    self.finished[req.rid] = req
+                    events.append(StepEvent(req.rid, None, True,
+                                            cancelled=True))
+                else:
+                    kept.append(req)
+            self.queue = kept
+        for i in range(b):
+            if slots[i] is not None and slots[i].req.cancelled:
+                req = slots[i].req
+                req.done = True
+                self.finished[req.rid] = req
+                events.append(StepEvent(req.rid, None, True,
+                                        cancelled=True))
+                slots[i] = None
 
-            tokens = np.zeros((b,), np.int32)
-            pos = np.zeros((b,), np.int32)
-            for i, s in enumerate(slots):
-                if s is None:
-                    continue
-                plen = s.req.prompt.size
-                tokens[i] = (s.req.prompt[s.fed] if s.fed < plen else s.last)
-                pos[i] = s.fed
+        # admission: every retired (or never-used) slot takes the next
+        # queued request NOW — between decode steps, not after a wave.
+        for i in range(b):
+            if slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                slots[i] = _Slot(req=req, key=self._request_key(req))
+                self.admissions.append((self._step_no, req.rid))
 
-            logits, cache = decode(params, cache, jnp.asarray(tokens),
-                                   jnp.asarray(pos))
-            self.rng, sub = jax.random.split(self.rng)
-            sampled = np.asarray(sampling.sample(sub, logits, self.scfg))
+        if not any(slots):
+            return events
 
-            for i, s in enumerate(slots):
-                if s is None:
-                    continue
-                s.fed += 1
-                if s.fed >= s.req.prompt.size:
-                    # this step consumed the prompt's last token (or a
-                    # generated one): its logits yield the next token
-                    s.last = int(sampled[i])
-                    s.req.output.append(s.last)
-                    if len(s.req.output) >= s.req.max_new_tokens:
-                        s.req.done = True
-                        self.finished[s.req.rid] = s.req
-                        slots[i] = None      # retired: refill next step
-            step += 1
-        return self.finished
+        tokens = np.zeros((b,), np.int32)
+        pos = np.zeros((b,), np.int32)
+        temperature = np.zeros((b,), np.float32)
+        top_p = np.ones((b,), np.float32)
+        top_k = np.zeros((b,), np.int32)
+        keys = []
+        for i, s in enumerate(slots):
+            if s is None:
+                keys.append(jax.random.PRNGKey(0))
+                continue
+            plen = s.req.prompt.size
+            tokens[i] = (s.req.prompt[s.fed] if s.fed < plen else s.last)
+            pos[i] = s.fed
+            temperature[i] = (self.scfg.temperature
+                              if s.req.temperature is None
+                              else s.req.temperature)
+            p = self.scfg.top_p if s.req.top_p is None else s.req.top_p
+            top_p[i] = 1.0 if p is None else p
+            top_k[i] = 0 if self.scfg.top_k is None else self.scfg.top_k
+            # the chain mirrors Engine.generate exactly: the first
+            # emission samples with the request key itself, every later
+            # one splits first — non-emitting (prompt replay) steps pass
+            # the current key but never advance it
+            if s.fed + 1 >= plen and s.req.output:
+                s.key, sub = jax.random.split(s.key)
+                keys.append(sub)
+            else:
+                keys.append(s.key)
+
+        logits, self._cache = self.engine._decode(
+            self.engine.params, self._cache, jnp.asarray(tokens),
+            jnp.asarray(pos))
+        sampled = np.asarray(sampling.sample_slots(
+            jnp.stack(keys), logits, jnp.asarray(temperature),
+            jnp.asarray(top_p), jnp.asarray(top_k)))
+
+        for i, s in enumerate(slots):
+            if s is None:
+                continue
+            s.fed += 1
+            if s.fed >= s.req.prompt.size:
+                # this step consumed the prompt's last token (or a
+                # generated one): its logits yield the next token
+                s.last = int(sampled[i])
+                s.req.output.append(s.last)
+                final = len(s.req.output) >= s.req.max_new_tokens
+                events.append(StepEvent(s.req.rid, s.last, final))
+                if final:
+                    s.req.done = True
+                    self.finished[s.req.rid] = s.req
+                    slots[i] = None      # retired: refill next step
+        self._step_no += 1
+        return events
 
     # ------------------------------------------------------------------
     # legacy batch-drain mode (families needing batch-global prefill)

@@ -158,3 +158,96 @@ def test_scheduler_rejects_oversized_prompt():
     sched = Scheduler(eng, prompt_budget=4)
     with pytest.raises(ValueError, match="budget"):
         sched.submit(Request(rid=0, prompt=np.zeros(10, np.int32)))
+
+
+def test_sample_slots_matches_scalar_sample():
+    """One row of the per-slot vectorized sampler is bit-identical to
+    the scalar ``sample`` path with the same key and params (this is
+    what makes HTTP per-request sampling reproduce solo runs)."""
+    logits = jax.random.normal(jax.random.PRNGKey(0), (1, 64))
+    for t, p, k in ((0.7, 0.9, 0), (1.2, 0.5, 0), (0.9, 1.0, 10),
+                    (0.0, 1.0, 0)):
+        cfg = sampling.SamplingConfig(temperature=t,
+                                      top_k=k or None,
+                                      top_p=None if p == 1.0 else p)
+        for seed in range(4):
+            key = jax.random.PRNGKey(seed)
+            a = sampling.sample(key, logits, cfg)
+            b = sampling.sample_slots(
+                key[None], logits,
+                jnp.asarray([t], jnp.float32), jnp.asarray([p],
+                                                           jnp.float32),
+                jnp.asarray([k], jnp.int32))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{t},{p},{k},{seed}")
+
+
+def test_scheduler_per_request_params_bit_identical():
+    """Concurrent requests with different temperature/top_p/seed each
+    reproduce a solo Engine.generate run with the same params."""
+    cfg = get_smoke_config("qwen3-4b")
+    eng = make_engine(cfg, jax.random.PRNGKey(0), max_seq=24)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 6, 4)]
+    params = [(0.9, 0.8, 7), (1.3, 0.5, 11), (0.0, None, 3)]
+    sched = Scheduler(eng, max_batch=2, prompt_budget=8,
+                      scfg=sampling.SamplingConfig(temperature=0.5))
+    for i, (p, (t, tp, sd)) in enumerate(zip(prompts, params)):
+        sched.submit(Request(rid=i, prompt=p, max_new_tokens=6,
+                             temperature=t, top_p=tp, seed=sd))
+    done = sched.run()
+    for i, (p, (t, tp, sd)) in enumerate(zip(prompts, params)):
+        scfg = sampling.SamplingConfig(temperature=t, top_p=tp)
+        ref = np.asarray(eng.generate(
+            jax.random.PRNGKey(sd), {"tokens": jnp.asarray(p)[None]},
+            jnp.asarray([p.size]), max_new_tokens=6, scfg=scfg))[0]
+        np.testing.assert_array_equal(np.asarray(done[i].output), ref,
+                                      err_msg=f"req {i}")
+
+
+def test_scheduler_rejects_mixed_family():
+    """One scheduler serves one family: a request declaring a different
+    family fails loudly instead of silently serializing behind (or in
+    front of) batch-drain waves."""
+    cfg = get_smoke_config("qwen3-4b")
+    eng = make_engine(cfg, jax.random.PRNGKey(0), max_seq=16)
+    sched = Scheduler(eng, prompt_budget=8)
+    sched.submit(Request(rid=0, prompt=np.zeros(2, np.int32),
+                         max_new_tokens=2, family="dense"))
+    with pytest.raises(ValueError, match="one Scheduler per family"):
+        sched.submit(Request(rid=1, prompt=np.zeros(2, np.int32),
+                             max_new_tokens=2, family="audio"))
+
+
+def test_scheduler_cancel_frees_slot():
+    """A cancelled live request retires at the next step boundary and
+    its slot admits the next queued request; a cancelled queued request
+    never runs."""
+    from repro.runtime.scheduler import StepEvent
+
+    cfg = get_smoke_config("qwen3-4b")
+    eng = make_engine(cfg, jax.random.PRNGKey(0), max_seq=24)
+    sched = Scheduler(eng, max_batch=1, prompt_budget=8,
+                      scfg=sampling.SamplingConfig(temperature=0.0))
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=3).astype(np.int32),
+            max_new_tokens=10))
+    for _ in range(4):          # request 0 holds the only slot
+        sched.step()
+    assert sched.live_slots == 1
+    assert sched.cancel(0)      # live -> retires at next boundary
+    assert sched.cancel(2)      # queued -> dropped, never admitted
+    assert not sched.cancel(99)
+    events = sched.step()
+    assert StepEvent(0, None, True, cancelled=True) in events
+    assert StepEvent(2, None, True, cancelled=True) in events
+    done = sched.run()
+    assert sorted(done) == [0, 1, 2]
+    assert len(done[1].output) == 10 and done[1].done
+    assert done[0].cancelled and len(done[0].output) < 10
+    assert done[2].cancelled and done[2].output == []
+    admitted = [rid for _, rid in sched.admissions]
+    assert admitted == [0, 1]   # 2 was never admitted
