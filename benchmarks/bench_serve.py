@@ -49,19 +49,18 @@ QUEUE_CAPACITY = 16
 PROMPT_BUDGET = 32
 
 
-def _make_server(tp: int, seed: int = 0):
+def _make_engine(tp: int, seed: int = 0, *, kv: str = "dense"):
     import jax
 
+    from repro.cache import PageSpec
     from repro.configs import get_smoke_config
     from repro.core.policy import ExecutionPolicy
     from repro.launch import mesh as mesh_lib
     from repro.models.common import ParallelContext, REPLICATED
-    from repro.runtime.sampling import SamplingConfig
     from repro.runtime.serve import make_engine
-    from repro.serving import ServingServer
 
     cfg = get_smoke_config(ARCH).with_quant(mode="mlp", scheme="tp-aware")
-    policy = ExecutionPolicy.from_config(cfg)
+    policy = ExecutionPolicy.from_config(cfg).with_(kv=PageSpec.parse(kv))
     if tp > 1:
         mesh = mesh_lib.make_host_mesh(model=tp)
         ctx = ParallelContext(mesh=mesh, batch_axes=("data",),
@@ -71,12 +70,24 @@ def _make_server(tp: int, seed: int = 0):
     engine = make_engine(cfg, jax.random.PRNGKey(seed), ctx=ctx,
                          max_seq=PROMPT_BUDGET + max(MAX_NEW_MIX) + 1,
                          policy=policy)
+    return cfg, engine
+
+
+def _serve(engine, seed: int = 0):
+    from repro.runtime.sampling import SamplingConfig
+    from repro.serving import ServingServer
+
     srv = ServingServer(engine, max_batch=MAX_BATCH,
                         prompt_budget=PROMPT_BUDGET,
                         scfg=SamplingConfig(temperature=0.0),
                         seed=seed, queue_capacity=QUEUE_CAPACITY,
                         retry_after=0.5)
-    return cfg, srv.start()
+    return srv.start()
+
+
+def _make_server(tp: int, seed: int = 0):
+    cfg, engine = _make_engine(tp, seed)
+    return cfg, _serve(engine, seed)
 
 
 def _stream_one(port: int, body: dict) -> dict:
@@ -113,19 +124,22 @@ def _stream_one(port: int, body: dict) -> dict:
 
 
 def _sweep(port: int, *, rate_rps: float, n: int, vocab: int,
-           seed: int) -> dict:
+           seed: int, bodies=None) -> dict:
     """Fire ``n`` Poisson arrivals at ``rate_rps``; aggregate client-side
-    latency."""
+    latency.  ``bodies`` overrides the default random request mix (the
+    paged-cache sweep feeds workload-shaped prompts)."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
-    bodies = []
-    for i in range(n):
-        plen = int(rng.integers(*PROMPT_MIX))
-        bodies.append({
-            "prompt": rng.integers(0, vocab, size=plen).tolist(),
-            "max_new_tokens": int(MAX_NEW_MIX[i % len(MAX_NEW_MIX)]),
-            "temperature": 0.8, "top_p": 0.95, "seed": i,
-        })
+    if bodies is None:
+        bodies = []
+        for i in range(n):
+            plen = int(rng.integers(*PROMPT_MIX))
+            bodies.append({
+                "prompt": rng.integers(0, vocab, size=plen).tolist(),
+                "max_new_tokens": int(MAX_NEW_MIX[i % len(MAX_NEW_MIX)]),
+                "temperature": 0.8, "top_p": 0.95, "seed": i,
+            })
+    n = len(bodies)
     records: list = [None] * n
 
     def client(i):
@@ -198,10 +212,112 @@ def bench(rates, tps, n, *, seed: int = 0, out_lines=None):
     return sweeps
 
 
+# ----------------------------------------------------------------------
+# paged-cache occupancy sweep (DESIGN.md §9) -> BENCH_paged.json
+# ----------------------------------------------------------------------
+
+#: cache layouts compared; page size 8 so the shared-prefix workload's
+#: 24-token common prefix spans 3 complete (shareable) pages
+KV_MODES = ("dense", "paged:8", "paged:8:int8")
+
+
+def _workload_bodies(kind: str, vocab: int, n: int, seed: int) -> list:
+    """Two cache-shaped workloads:
+
+    * ``long-prompt`` — unique near-budget prompts: occupancy is pure
+      live-token footprint (paging wins by not sizing for max_seq);
+    * ``shared-prefix`` — one 24-token common prefix + a 4-token unique
+      tail: complete prefix pages are shared and replay-skipped, so both
+      peak bytes AND TTFT drop.
+    """
+    rng = np.random.default_rng(seed)
+    bodies = []
+    if kind == "long-prompt":
+        for i in range(n):
+            plen = int(rng.integers(PROMPT_BUDGET - 6, PROMPT_BUDGET))
+            bodies.append({"prompt": rng.integers(0, vocab,
+                                                  size=plen).tolist(),
+                           "max_new_tokens": 8, "temperature": 0.0})
+    else:
+        prefix = rng.integers(0, vocab, size=24).tolist()
+        for i in range(n):
+            tail = rng.integers(0, vocab, size=4).tolist()
+            bodies.append({"prompt": prefix + tail,
+                           "max_new_tokens": 8, "temperature": 0.0})
+    return bodies
+
+
+def bench_paged(n: int, rate: float, *, seed: int = 0, out_lines=None):
+    """Cache-occupancy sweep: kv layout x workload.  Each point gets a
+    fresh server (fresh pool + counters) over a shared per-layout
+    engine; reports client latency plus the server's own cache stats
+    (peak live bytes vs the dense worst-case footprint, prefix hits)."""
+    lines = out_lines if out_lines is not None else []
+    header = ("kv,workload,completed,ttft_p50_ms,ttft_p99_ms,itl_p50_ms,"
+              "peak_cache_bytes,dense_cache_bytes,prefix_hits,"
+              "prefix_hit_rate")
+    print(f"# bench_paged: cache occupancy x workload (arch={ARCH} "
+          f"smoke, max_batch={MAX_BATCH}, rate={rate:g} rps)")
+    print(header)
+    lines.append(header)
+    points = []
+    for kv in KV_MODES:
+        cfg, engine = _make_engine(1, seed, kv=kv)
+        for wl in ("long-prompt", "shared-prefix"):
+            srv = _serve(engine, seed)
+            try:
+                _stream_one(srv.port, {"prompt": [1, 2, 3],
+                                       "max_new_tokens": 2})   # warm-up
+                # drop the warm-up request's footprint from the counters
+                srv.loop.scheduler.release_cache()
+                bodies = _workload_bodies(wl, cfg.vocab_size, n, seed)
+                s = _sweep(srv.port, rate_rps=rate, n=n,
+                           vocab=cfg.vocab_size, seed=seed, bodies=bodies)
+                cache = srv.loop.stats()["cache"]
+            finally:
+                srv.shutdown(drain=False, timeout=10.0)
+            if "pages" in cache:
+                peak = cache["bytes"]["peak_live"]
+                dense_eq = cache["bytes"]["dense_equiv"]
+                hits = cache["prefix"]["hits"]
+                hit_rate = cache["prefix"]["hit_rate"]
+            else:
+                peak = dense_eq = cache["bytes"]["pool"]
+                hits, hit_rate = 0, 0.0
+            point = {"kv": kv, "workload": wl,
+                     "completed": s["completed"],
+                     "ttft_ms": s["ttft_ms"], "itl_ms": s["itl_ms"],
+                     "tok_per_s": s["tok_per_s"],
+                     "peak_cache_bytes": peak,
+                     "dense_cache_bytes": dense_eq,
+                     "prefix_hits": hits, "prefix_hit_rate": hit_rate}
+            points.append(point)
+            row = (f"{kv},{wl},{s['completed']},{s['ttft_ms']['p50']},"
+                   f"{s['ttft_ms']['p99']},{s['itl_ms']['p50']},"
+                   f"{peak},{dense_eq},{hits},{hit_rate}")
+            print(row)
+            lines.append(row)
+    return points
+
+
+def _write_paged_snapshot(points, *, n: int, rate: float) -> str:
+    path = snapshot.write("paged", config={
+        "arch": ARCH, "smoke": True, "scheme": "tp-aware",
+        "max_batch": MAX_BATCH, "prompt_budget": PROMPT_BUDGET,
+        "kv_modes": list(KV_MODES),
+        "workloads": ["long-prompt", "shared-prefix"],
+        "requests_per_point": n, "rate_rps": rate,
+    }, metrics={"points": points})
+    print(f"wrote {path}")
+    return path
+
+
 def run(out_lines: list, *, quick: bool = True):
     """run.py entry: quick sweep (tp=1 only) so the suite stays fast."""
     sweeps = bench((4.0, 16.0), (1,), 8, out_lines=out_lines)
     _write_snapshot(sweeps, quick=True)
+    points = bench_paged(8, 8.0, out_lines=out_lines)
+    _write_paged_snapshot(points, n=8, rate=8.0)
 
 
 def _write_snapshot(sweeps, *, quick: bool) -> str:
@@ -222,6 +338,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="tp=1, two rates, few requests (CI smoke)")
+    ap.add_argument("--paged-only", action="store_true",
+                    help="run only the paged-cache occupancy sweep "
+                         "(writes BENCH_paged.json)")
     ap.add_argument("--rates", default=None,
                     help="comma-separated arrival rates in req/s "
                          "(default 2,8,32; quick: 4,16)")
@@ -241,8 +360,14 @@ def main():
            if args.tp else ((1,) if args.quick else (1, 2)))
     n = args.requests or (8 if args.quick else 40)
 
-    sweeps = bench(rates, tps, n, seed=args.seed)
-    _write_snapshot(sweeps, quick=args.quick)
+    if not args.paged_only:
+        sweeps = bench(rates, tps, n, seed=args.seed)
+        _write_snapshot(sweeps, quick=args.quick)
+    if args.paged_only or not args.quick:
+        np_ = args.requests or (8 if args.quick else 16)
+        rate = 8.0
+        points = bench_paged(np_, rate, seed=args.seed)
+        _write_paged_snapshot(points, n=np_, rate=rate)
 
 
 if __name__ == "__main__":

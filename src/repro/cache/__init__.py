@@ -1,0 +1,17 @@
+"""Paged KV/state cache subsystem (DESIGN.md §9).
+
+``PageSpec`` (the policy knob) -> ``PagedCacheManager`` (host page
+tables, prefix sharing, reservations) -> ``paged`` (device pool,
+gather/scatter, quantized page codec) on top of ``PageAllocator`` /
+``PrefixStore``.
+"""
+
+from repro.cache.allocator import OutOfPages, PageAllocator
+from repro.cache.manager import PagedCacheManager
+from repro.cache.prefix import PrefixStore, chain_keys
+from repro.cache.spec import PageSpec
+
+__all__ = [
+    "OutOfPages", "PageAllocator", "PagedCacheManager", "PrefixStore",
+    "chain_keys", "PageSpec",
+]

@@ -1,0 +1,197 @@
+"""Paged KV pool: device-side layout, gather/scatter, quantized pages.
+
+The pool replaces the dense per-slot cache rows ``(..., B, cap, KV, D)``
+with a shared page pool ``(..., N_pages, page_size, KV, D)`` plus a
+host-managed per-slot page table ``(B, Pmax)`` of int32 page indices
+(``cache/manager.py``).  Decode gathers a slot's logical cache by page
+index and scatters the new token into ``(table[b, pos // ps], pos % ps)``
+— memory scales with *live* tokens, not worst-case sequence.
+
+Quantized pages (``PageSpec.bits``) store uint8 / nibble-packed-uint32
+codes with an asymmetric (scale, zero) pair per (token, head) row over
+head_dim — the same min/max scheme ``core/quantization`` uses per group,
+and int4 packing goes through its ``pack_int4``/``unpack_int4``.  The
+variant is carried entirely by the pool leaves' dtypes (uint8 -> int8,
+uint32 -> int4, float -> raw), so one jitted decode signature serves all
+three: jit specializes on the pytree structure + dtypes, no static
+flags.
+
+Error model: dequantized values differ from the stored activations by at
+most ``(max - min) / (2 * qmax)`` per (token, head) row (round-to-
+nearest on a qmax-level asymmetric grid); the fp pool is bit-exact with
+the dense cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.quantization import pack_int4, unpack_int4
+
+INT8_QMAX = 255
+INT4_QMAX = 15
+
+
+def pool_bits(pool: dict) -> Optional[int]:
+    """Page payload width, recovered from the pool's own dtypes."""
+    dt = pool["k"].dtype
+    if dt == jnp.uint8:
+        return 8
+    if dt == jnp.uint32:
+        return 4
+    return None
+
+
+def init_pool(lead: tuple, n_pages: int, page_size: int, kv_heads: int,
+              head_dim: int, *, dtype=jnp.bfloat16,
+              bits: Optional[int] = None) -> dict:
+    """Zeroed page pool with leading (layer-stack) dims ``lead``."""
+    body = (n_pages, page_size, kv_heads)
+    if bits is None:
+        shape = lead + body + (head_dim,)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if bits == 8:
+        codes = lead + body + (head_dim,)
+        code_dtype = jnp.uint8
+    elif bits == 4:
+        if head_dim % 8:
+            raise ValueError(
+                f"int4 pages need head_dim % 8 == 0, got {head_dim}")
+        codes = lead + body + (head_dim // 8,)
+        code_dtype = jnp.uint32
+    else:
+        raise ValueError(f"kv bits must be None, 8 or 4, got {bits}")
+    meta = lead + body
+    pool = {}
+    for name in ("k", "v"):
+        pool[name] = jnp.zeros(codes, code_dtype)
+        pool[f"{name}_scale"] = jnp.zeros(meta, jnp.float32)
+        pool[f"{name}_zero"] = jnp.zeros(meta, jnp.float32)
+    return pool
+
+
+def pool_page_bytes(pool: dict, n_pages: int) -> tuple[int, int]:
+    """(actual, fp-equivalent) bytes per page, over all layer dims.
+
+    ``fp-equivalent`` prices the same logical (token, head, head_dim)
+    values at the dense cache's bf16 width — the baseline the stats
+    endpoint reports quantized savings against.
+    """
+    actual = sum(int(leaf.nbytes) for leaf in pool.values())
+    fp = 0
+    for name in ("k", "v"):
+        leaf = pool[name]
+        values = leaf.size * (8 if leaf.dtype == jnp.uint32 else 1)
+        fp += values * 2
+    return actual // n_pages, fp // n_pages
+
+
+# ---------------------------------------------------------------------------
+# quantized page codec — per (token, head) asymmetric min/max over head_dim
+# ---------------------------------------------------------------------------
+
+def _quantize_rows(x: jnp.ndarray, qmax: int):
+    """x: (..., D) -> (codes int32 in [0, qmax], scale, zero) per row."""
+    x32 = x.astype(jnp.float32)
+    wmin = jnp.min(x32, axis=-1)
+    wmax = jnp.max(x32, axis=-1)
+    scale = (wmax - wmin) / qmax
+    # all-equal rows (e.g. zero-init) quantize through scale 1 exactly
+    scale = jnp.where(scale > 0, scale, 1.0)
+    zero = jnp.clip(jnp.round(-wmin / scale), 0, qmax)
+    codes = jnp.clip(jnp.round(x32 / scale[..., None] + zero[..., None]),
+                     0, qmax).astype(jnp.int32)
+    return codes, scale, zero
+
+
+def _dequantize_rows(codes: jnp.ndarray, scale: jnp.ndarray,
+                     zero: jnp.ndarray) -> jnp.ndarray:
+    return (codes.astype(jnp.float32) - zero[..., None]) * scale[..., None]
+
+
+def _pack_last(codes: jnp.ndarray) -> jnp.ndarray:
+    """Nibble-pack int codes along the last axis via ``pack_int4``
+    (which packs along the first): (..., D) -> (..., D // 8) uint32."""
+    lead = codes.shape[:-1]
+    d = codes.shape[-1]
+    flat = codes.reshape(-1, d).T                       # (D, X)
+    packed = pack_int4(flat)                            # (D // 8, X)
+    return packed.T.reshape(*lead, d // 8)
+
+
+def _unpack_last(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., D // 8) uint32 -> (..., D) int32 codes."""
+    lead = packed.shape[:-1]
+    d8 = packed.shape[-1]
+    flat = packed.reshape(-1, d8).T                     # (D // 8, X)
+    codes = unpack_int4(flat)                           # (D, X)
+    return codes.T.reshape(*lead, d8 * 8)
+
+
+# ---------------------------------------------------------------------------
+# gather / scatter
+# ---------------------------------------------------------------------------
+
+def gather(pool: dict, pages: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize each slot's logical cache from its page list.
+
+    pool: one layer's pool (no layer dims) — {"k","v": (N, ps, KV, D)}
+    (+ scale/zero for quantized); pages: (B, Pmax) int32.  Returns
+    (k, v): (B, Pmax * ps, KV, D), f32 for quantized pools, pool dtype
+    for raw.  Unallocated table entries point at the scratch page
+    (``manager.py``); the caller's position mask hides those columns
+    (score -1e30 -> exp == 0.0 exactly), so garbage pages never
+    contribute.
+    """
+    bits = pool_bits(pool)
+    b, pmax = pages.shape
+    ps = pool["k"].shape[1]
+
+    def one(name):
+        tile = pool[name][pages]                 # (B, Pmax, ps, KV, [D])
+        if bits is None:
+            out = tile
+        else:
+            codes = _unpack_last(tile) if bits == 4 else tile
+            out = _dequantize_rows(codes, pool[f"{name}_scale"][pages],
+                                   pool[f"{name}_zero"][pages])
+        kv, d = out.shape[-2], out.shape[-1]
+        return out.reshape(b, pmax * ps, kv, d)
+
+    return one("k"), one("v")
+
+
+def scatter_token(pool: dict, k: jnp.ndarray, v: jnp.ndarray,
+                  pages: jnp.ndarray, pos: jnp.ndarray) -> dict:
+    """Write one token per slot at its page-table position.
+
+    k/v: (B, KV, D); pages: (B, Pmax); pos: (B,) per-slot positions.
+    Slots sharing a page write idempotently (identical prefixes produce
+    identical K/V, see ``cache/prefix.py``), so duplicate (page, offset)
+    targets are safe regardless of scatter order.
+    """
+    bits = pool_bits(pool)
+    ps = pool["k"].shape[1]
+    b = k.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    pids = jnp.take_along_axis(pages, (pos // ps)[:, None], axis=1)[:, 0]
+    offs = pos % ps
+
+    new = dict(pool)
+    for name, val in (("k", k), ("v", v)):
+        if bits is None:
+            new[name] = pool[name].at[pids, offs].set(
+                val.astype(pool[name].dtype))
+            continue
+        qmax = INT4_QMAX if bits == 4 else INT8_QMAX
+        codes, scale, zero = _quantize_rows(val, qmax)   # (B, KV[, D])
+        if bits == 4:
+            payload = _pack_last(codes)
+        else:
+            payload = codes.astype(jnp.uint8)
+        new[name] = pool[name].at[pids, offs].set(payload)
+        new[f"{name}_scale"] = pool[f"{name}_scale"].at[pids, offs].set(scale)
+        new[f"{name}_zero"] = pool[f"{name}_zero"].at[pids, offs].set(zero)
+    return new

@@ -58,6 +58,13 @@ class QuantConfig:
     backend: str = "auto"        # "auto" | kernels.dispatch registry key
     compute_dtype: str = "float32"   # "float32" | "bfloat16" | "float16"
     collective: str = "psum"     # comm spec/plan shorthand
+    # Decode KV-cache layout (``repro.cache.PageSpec`` via
+    # ``ExecutionPolicy.kv``): None -> dense per-slot rows; a page size
+    # turns on the paged pool, kv_bits (8|4) additionally quantizes the
+    # page payload blockwise.  Runtime-only: excluded from artifact
+    # ``validate`` (the weight plan is independent of cache layout).
+    kv_page_size: Optional[int] = None
+    kv_bits: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)

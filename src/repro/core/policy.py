@@ -96,8 +96,13 @@ class ExecutionPolicy:
     accum_dtype: Any = jnp.float32
     collective: Union[CollectiveSpec, CollectivePlan, str] = CollectiveSpec()
     tiling: KernelTiling = KernelTiling()
+    # Decode-cache layout ("repro.cache.PageSpec"): dense per-slot rows,
+    # or a shared page pool ("paged:16", "paged:16:int8", ...).  String
+    # shorthands parse in __post_init__, mirroring ``collective``.
+    kv: Any = None
 
     def __post_init__(self):
+        from repro.cache.spec import PageSpec
         from repro.core.reorder import SCHEMES
         if self.scheme not in SCHEMES:
             raise ValueError(
@@ -108,6 +113,7 @@ class ExecutionPolicy:
                            _canon_dtype(self.compute_dtype))
         object.__setattr__(self, "accum_dtype",
                            _canon_dtype(self.accum_dtype))
+        object.__setattr__(self, "kv", PageSpec.parse(self.kv))
 
     # ---- builders ---------------------------------------------------------
 
@@ -156,11 +162,14 @@ class ExecutionPolicy:
 
         compute = lookup("compute_dtype", qc.compute_dtype)
         collective = parse_collective(qc.collective)
+        from repro.cache.spec import PageSpec
+        kv = PageSpec(page_size=getattr(qc, "kv_page_size", None),
+                      bits=getattr(qc, "kv_bits", None))
         if qc.backend == "auto":
             return cls.auto(qc.scheme, compute_dtype=compute,
-                            collective=collective)
+                            collective=collective, kv=kv)
         return cls(scheme=qc.scheme, backend=qc.backend,
-                   compute_dtype=compute, collective=collective)
+                   compute_dtype=compute, collective=collective, kv=kv)
 
 
 DEFAULT_POLICY = ExecutionPolicy()

@@ -80,6 +80,13 @@ def _plan_args(ap: argparse.ArgumentParser):
                            ",...,*=<default>' (e.g. per-layer:*.mlp="
                            "quant-int8:128,*=psum)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-page-size", type=int, default=None,
+                    help="turn on the paged KV cache with this page size "
+                         "in tokens (DESIGN.md §9); default: dense "
+                         "per-slot rows")
+    ap.add_argument("--kv-bits", type=int, default=None, choices=[8, 4],
+                    help="quantize page payloads blockwise to int8/int4 "
+                         "(requires --kv-page-size)")
 
 
 def _build_cfg(args):
@@ -88,7 +95,9 @@ def _build_cfg(args):
     # the whole deployment plan lives on the config; the policy below is
     # derived from it and flows unchanged to the kernels
     return cfg.with_quant(mode="mlp", scheme=args.scheme,
-                          backend=args.backend, collective=args.collective)
+                          backend=args.backend, collective=args.collective,
+                          kv_page_size=args.kv_page_size,
+                          kv_bits=args.kv_bits)
 
 
 def prepare(argv=None):
@@ -150,6 +159,15 @@ def _load_artifact(args):
            else get_config(man["arch_id"]))
     cfg = cfg.with_quant(**man["quant"])
     policy = art.policy()
+    # cache layout is runtime-only (excluded from validate): CLI kv flags
+    # override the manifest's recorded layout on the POLICY, never on cfg
+    # (mutating cfg would break the config-hash check against a plan that
+    # is identical either way)
+    if args.kv_page_size is not None or args.kv_bits is not None:
+        from repro.cache import PageSpec
+
+        policy = policy.with_(kv=PageSpec(page_size=args.kv_page_size,
+                                          bits=args.kv_bits))
     tp = args.tp if args.tp > 1 else art.tp
     art.validate(cfg=cfg, policy=policy, tp=tp)
     return cfg, policy, art, tp
@@ -228,7 +246,8 @@ def main(argv=None):
         print(f"serving {cfg.arch_id} on http://{srv.address[0]}:"
               f"{srv.port} [scheme={policy.scheme} "
               f"backend={policy.backend} "
-              f"collective={policy.collective.shorthand()} tp={tp} "
+              f"collective={policy.collective.shorthand()} "
+              f"kv={policy.kv.shorthand()} tp={tp} "
               f"max_batch={args.max_batch} "
               f"queue={args.queue_capacity} {src}]", flush=True)
         srv.serve_forever()

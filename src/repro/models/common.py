@@ -390,7 +390,7 @@ def attention_forward(cfg: ModelConfig, p, x, ctx: ParallelContext, *,
 
 
 def attention_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ParallelContext,
-                     *, window=None):
+                     *, window=None, pages=None):
     """One-token decode with KV cache.
 
     x: (B, 1, d); cache: {"k","v": (B, C, KV, D)} where C = cache capacity
@@ -399,11 +399,20 @@ def attention_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ParallelContext,
     path) or a (B,) vector of *per-slot* positions (continuous batching:
     the scheduler admits a new request into a retired slot mid-stream, so
     each slot runs its own clock).  Returns (out, new_cache).
+
+    ``pages``: (B, Pmax) int32 per-slot page table — the cache is then a
+    page *pool* {"k","v": (N_pages, page_size, KV, D)} (plus scale/zero
+    leaves for quantized pages; ``repro.cache.paged``) instead of dense
+    per-slot rows: the new token scatters into
+    ``(pages[b, pos // ps], pos % ps)`` and K/V are gathered back by page
+    index.  Masked gather columns (pos < j, including whole unallocated
+    pages aliased to page 0) score -1e30, whose exp underflows to exactly
+    0.0 in f32 — so the padded tail never contributes and paged decode is
+    bit-identical to dense for fp pools, at any page size.
     """
     b = x.shape[0]
     hd = cfg.head_dim
     kvh, _, h = head_grid(cfg)          # deployed (possibly padded) grid
-    cap = cache["k"].shape[1]
     pos = jnp.asarray(pos, jnp.int32)
     per_slot = pos.ndim == 1            # (B,) per-slot clocks
 
@@ -418,6 +427,31 @@ def attention_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ParallelContext,
         q = rope(q, posv, cfg.rope_theta)
         k = rope(k, posv, cfg.rope_theta)
 
+    if pages is not None:
+        from repro.cache import paged as paged_pool
+
+        if window is not None:
+            raise ValueError("paged decode does not take a ring-buffer "
+                             "window (windowed caches are fixed-size per "
+                             "slot and stay dense)")
+        if not per_slot:
+            raise ValueError("paged decode requires per-slot (B,) "
+                             "positions (the page table is per slot)")
+        new_cache = paged_pool.scatter_token(cache, k[:, 0], v[:, 0],
+                                             pages, pos)
+        kk, vv = paged_pool.gather(new_cache, pages)   # (B, T, KV, D)
+        t = kk.shape[1]
+        valid = jnp.arange(t)[None, :] <= pos[:, None]
+        mask = jnp.broadcast_to(valid[:, None, :], (b, 1, t))
+        kk = ctx.shard(kk, ctx.batch_spec, ctx.model_axis, None, None)
+        vv = ctx.shard(vv, ctx.batch_spec, ctx.model_axis, None, None)
+        q = ctx.shard(q, ctx.batch_spec, None, ctx.model_axis, None)
+        out = _sdpa(cfg, ctx, q, kk.astype(x.dtype), vv.astype(x.dtype),
+                    mask)
+        y = out @ p["wo"]
+        return ctx.shard(y, ctx.batch_spec, None, None), new_cache
+
+    cap = cache["k"].shape[1]
     slot = pos % cap if window is not None else pos
     if per_slot:
         # per-slot scatter: each batch row writes its own cache position
@@ -459,6 +493,16 @@ def init_kv_cache(cfg: ModelConfig, num_layers: int, batch: int, seq_len: int,
     kvp, _, _ = head_grid(cfg)
     shape = (num_layers, batch, cap, kvp, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_kv_cache(cfg: ModelConfig, num_layers: int, n_pages: int,
+                        page_size: int, *, bits=None, dtype=jnp.bfloat16):
+    """Layer-stacked page pool replacing ``init_kv_cache``'s dense rows:
+    leaves (L, N_pages, page_size, KVp, D) — see ``repro.cache.paged``."""
+    from repro.cache import paged as paged_pool
+    kvp, _, _ = head_grid(cfg)
+    return paged_pool.init_pool((num_layers,), n_pages, page_size, kvp,
+                                cfg.head_dim, dtype=dtype, bits=bits)
 
 
 def kv_cache_specs(cfg: ModelConfig, ctx: ParallelContext):

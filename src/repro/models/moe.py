@@ -320,18 +320,25 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, window=None,
                             window=window, dtype=dtype)
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, *, bits=None, dtype=jnp.bfloat16):
+    del batch  # pure pool: per-slot state lives in the page table
+    return cm.init_paged_kv_cache(cfg, cfg.num_layers, n_pages, page_size,
+                                  bits=bits, dtype=dtype)
+
+
 def cache_specs(cfg: ModelConfig, ctx: ParallelContext):
     return cm.kv_cache_specs(cfg, ctx)
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
-                ctx: ParallelContext, *, window=None):
+                ctx: ParallelContext, *, window=None, pages=None):
     x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
 
     def body(x, lp, lc, _):
         h, nc = cm.attention_decode(cfg, lp["attn"],
                                     cm.apply_norm(cfg, lp["ln1"], x),
-                                    lc, pos, ctx, window=window)
+                                    lc, pos, ctx, window=window, pages=pages)
         x = x + h
         h = moe_forward(cfg, lp["moe"], cm.apply_norm(cfg, lp["ln2"], x), ctx)
         return x + h, nc

@@ -80,13 +80,29 @@ class Model:
         return self.module.init_cache(self.cfg, batch, seq_len,
                                       window=window, dtype=dtype)
 
+    def init_paged_cache(self, batch: int, n_pages: int, page_size: int, *,
+                         bits=None, dtype=jnp.bfloat16):
+        """Page-pool cache (``repro.cache``): families whose KV grows with
+        the sequence export ``init_paged_cache``; recurrent families keep
+        their O(1) dense state and never page."""
+        if not self.supports_paged:
+            raise ValueError(
+                f"family {self.cfg.family!r} has no paged cache (its decode "
+                "state is fixed-size per slot)")
+        return self.module.init_paged_cache(self.cfg, batch, n_pages,
+                                            page_size, bits=bits, dtype=dtype)
+
+    @property
+    def supports_paged(self) -> bool:
+        return hasattr(self.module, "init_paged_cache")
+
     def cache_specs(self, ctx: ParallelContext):
         return self.module.cache_specs(self.cfg, ctx)
 
     def decode_step(self, params, cache, tokens, pos, ctx: ParallelContext,
-                    *, window=None):
+                    *, window=None, pages=None):
         return self.module.decode_step(self.cfg, params, cache, tokens, pos,
-                                       ctx, window=window)
+                                       ctx, window=window, pages=pages)
 
     # ----- modality-stub batches -------------------------------------------
 

@@ -263,7 +263,11 @@ def cache_specs(cfg: ModelConfig, ctx: ParallelContext):
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
-                ctx: ParallelContext, *, window=None):
+                ctx: ParallelContext, *, window=None, pages=None):
+    # ``pages`` accepted for interface uniformity and ignored: the local
+    # ring-buffer KV is already fixed-size per slot (state-like) and the
+    # recurrent conv/lru state has no sequence dim — nothing to page.
+    del pages
     x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
     rec_fwd = _rec_layer_fwd(cfg, ctx)
 

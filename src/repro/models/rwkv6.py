@@ -248,7 +248,11 @@ def cache_specs(cfg: ModelConfig, ctx: ParallelContext):
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
-                ctx: ParallelContext, *, window=None):
+                ctx: ParallelContext, *, window=None, pages=None):
+    # ``pages`` accepted for interface uniformity and ignored: rwkv6's
+    # entire decode state is O(1) per slot (shift rows + wkv matrix) —
+    # there is no KV sequence to page.
+    del pages
     x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
 
     def body(x, xs):

@@ -140,6 +140,22 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, window=None,
     }
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, *, bits=None, dtype=jnp.bfloat16):
+    """Paged self-attn pool with (n_super, n_self) layer lead dims;
+    cross K/V stays dense (vision prefix fixed per slot)."""
+    from repro.cache import paged as paged_pool
+    ns, nself = _n_super(cfg)
+    kvh, _, _ = cm.head_grid(cfg)
+    hd = cfg.head_dim
+    return {
+        "self": paged_pool.init_pool((ns, nself), n_pages, page_size, kvh,
+                                     hd, dtype=dtype, bits=bits),
+        "cross_k": jnp.zeros((ns, batch, cfg.vision_tokens, kvh, hd), dtype),
+        "cross_v": jnp.zeros((ns, batch, cfg.vision_tokens, kvh, hd), dtype),
+    }
+
+
 def cache_specs(cfg: ModelConfig, ctx: ParallelContext):
     s = P(None, None, ctx.batch_spec, ctx.model_axis, None, None)
     xs = P(None, ctx.batch_spec, None, None, None)
@@ -162,14 +178,14 @@ def precompute_cross(cfg: ModelConfig, params, patches, ctx: ParallelContext):
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
-                ctx: ParallelContext, *, window=None):
+                ctx: ParallelContext, *, window=None, pages=None):
     x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
 
     def self_body(x, xs):
         lp, lc = xs
         h, nc = cm.attention_decode(cfg, lp["attn"],
                                     cm.apply_norm(cfg, lp["ln1"], x),
-                                    lc, pos, ctx, window=window)
+                                    lc, pos, ctx, window=window, pages=pages)
         x = x + h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
                            ctx, path="super.self.mlp")

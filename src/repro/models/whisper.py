@@ -142,6 +142,21 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, window=None,
     }
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, *, bits=None, dtype=jnp.bfloat16):
+    """Paged decoder self-attn pool; cross K/V stays dense (fixed
+    encoder_seq per slot, written once at prefill — nothing to page)."""
+    l = cfg.num_layers
+    kvh, _, _ = cm.head_grid(cfg)
+    hd = cfg.head_dim
+    return {
+        "self": cm.init_paged_kv_cache(cfg, l, n_pages, page_size,
+                                       bits=bits, dtype=dtype),
+        "cross_k": jnp.zeros((l, batch, cfg.encoder_seq, kvh, hd), dtype),
+        "cross_v": jnp.zeros((l, batch, cfg.encoder_seq, kvh, hd), dtype),
+    }
+
+
 def cache_specs(cfg: ModelConfig, ctx: ParallelContext):
     xspec = P(None, ctx.batch_spec, None, None, None)
     return {"self": cm.kv_cache_specs(cfg, ctx),
@@ -164,18 +179,23 @@ def precompute_cross(cfg: ModelConfig, params, enc, ctx: ParallelContext):
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
-                ctx: ParallelContext, *, window=None):
+                ctx: ParallelContext, *, window=None, pages=None):
     x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
     d = cfg.d_model
     pos_emb = _sinusoid(cfg.max_target_positions or 448, d)
-    x = x + jax.lax.dynamic_slice(pos_emb, (jnp.minimum(
-        pos, pos_emb.shape[0] - 1), 0), (1, d)).astype(x.dtype)[None]
+    if jnp.ndim(pos):
+        # per-slot clocks: gather each slot's own position embedding
+        idx = jnp.minimum(jnp.asarray(pos, jnp.int32), pos_emb.shape[0] - 1)
+        x = x + pos_emb[idx][:, None].astype(x.dtype)
+    else:
+        x = x + jax.lax.dynamic_slice(pos_emb, (jnp.minimum(
+            pos, pos_emb.shape[0] - 1), 0), (1, d)).astype(x.dtype)[None]
 
     def body(x, xs):
         lp, (lc, xk, xv) = xs
         h, nc = cm.attention_decode(cfg, lp["attn"],
                                     cm.apply_norm(cfg, lp["ln1"], x),
-                                    lc, pos, ctx, window=window)
+                                    lc, pos, ctx, window=window, pages=pages)
         x = x + h
         # cross-attn against precomputed encoder K/V
         xa = lp["xattn"]

@@ -49,13 +49,21 @@ def config_hash(cfg) -> str:
 
 
 def policy_fields(policy: ExecutionPolicy) -> dict:
-    """The manifest's view of an ``ExecutionPolicy`` (strings only)."""
+    """The manifest's view of an ``ExecutionPolicy`` (strings only).
+
+    ``kv`` is recorded for provenance (so a served stats endpoint and the
+    artifact agree on what was prepared) but excluded from ``validate``'s
+    comparison: the cache layout is a pure runtime decision — the weight
+    plan is identical under dense and paged serving, and an operator may
+    flip paging on per deployment without re-running prepare.
+    """
     return {
         "scheme": policy.scheme,
         "backend": policy.backend,
         "compute_dtype": jnp.dtype(policy.compute_dtype).name,
         "accum_dtype": jnp.dtype(policy.accum_dtype).name,
         "collective": policy.collective.shorthand(),
+        "kv": policy.kv.shorthand(),
     }
 
 
@@ -124,7 +132,7 @@ class DeploymentArtifact:
         return ExecutionPolicy(
             scheme=p["scheme"], backend=p["backend"],
             compute_dtype=p["compute_dtype"], accum_dtype=p["accum_dtype"],
-            collective=p["collective"])
+            collective=p["collective"], kv=p.get("kv", "dense"))
 
     def rank_tree(self, r: int):
         return self.rank_params[r]
@@ -167,10 +175,14 @@ class DeploymentArtifact:
                     "changed since this plan was compiled")
         if policy is not None:
             want = policy_fields(policy)
-            if want != self.manifest["policy"]:
+            have = dict(self.manifest["policy"])
+            # cache layout is runtime-only (see policy_fields): an artifact
+            # prepared dense serves paged and vice versa
+            want.pop("kv", None)
+            have.pop("kv", None)
+            if want != have:
                 raise PlanMismatchError(
-                    f"policy {want} != artifact's plan "
-                    f"{self.manifest['policy']}")
+                    f"policy {want} != artifact's plan {have}")
         if tp is not None and int(tp) != self.tp:
             raise PlanMismatchError(
                 f"mesh model-axis degree {tp} != artifact's TP "

@@ -14,17 +14,33 @@ Two drain modes:
   clock.  A slot that finishes is refilled from the queue at the next
   step boundary — prompt replay and generation are the same decode loop,
   so admission never stalls the other slots.  Numerics per request are
-  bit-identical to running it alone (the causal mask hides every other
-  slot's cache rows).  This mode is incremental: ``step()`` runs exactly
-  one admission + decode step and reports what happened as
-  ``StepEvent``s, which is what the serving front end
-  (``repro.serving``) builds its streaming loop on; ``run()`` just
-  steps until the queue drains.
+  bit-identical to running it alone: for attention families the causal
+  mask hides every other slot's cache rows; for recurrent families
+  (rglru/rwkv6) the re-admitted slot's state lane is zeroed
+  (``Engine.reset_slot``) — exactly the fresh-cache initial condition.
+  This mode is incremental: ``step()`` runs exactly one admission +
+  decode step and reports what happened as ``StepEvent``s, which is what
+  the serving front end (``repro.serving``) builds its streaming loop
+  on; ``run()`` just steps until the queue drains.
 * **batch-drain** (legacy fallback, audio/vlm): popleft up to
   ``max_batch`` requests, run them to completion via ``Engine.generate``
   (those families need the batch-global cross-attention prefill).
   Per-request sampling overrides are a continuous-mode feature; this
   path samples with the scheduler-global config.
+
+Cache lifecycle: the decode cache (dense rows or the paged pool) is
+built lazily on the first step and — new in the paged-cache PR — freed
+again by ``release_cache()`` once the engine idles, so a long-lived
+serving loop doesn't pin peak-batch cache memory between traffic bursts.
+
+Paged mode (``engine.uses_page_table``, DESIGN.md §9): a
+``PagedCacheManager`` owns per-slot page tables over a shared page pool.
+Admission reserves each request's worst-case page count (so mid-decode
+growth never deadlocks), credits prefix-shared pages (identical leading
+prompt pages skip replay entirely), and ``step()`` threads the table
+into the jitted decode.  Exhaustion surfaces as ``can_admit() == False``
+— the serving loop then leaves requests queued and its admission queue
+backs up into 429s, never a mid-decode failure.
 
 **One scheduler serves one family.**  Continuous and batch-drain
 requests cannot interleave inside one queue: a batch-drain wave holds
@@ -103,7 +119,7 @@ class Scheduler:
     def __init__(self, engine: Engine, *, max_batch: int = 8,
                  prompt_budget: int = 128,
                  scfg: sampling.SamplingConfig = sampling.SamplingConfig(),
-                 seed: int = 0):
+                 seed: int = 0, n_pages: Optional[int] = None):
         self.engine = engine
         self.max_batch = max_batch
         self.prompt_budget = prompt_budget
@@ -116,9 +132,20 @@ class Scheduler:
         #: admitted into retired slots *between* decode steps.
         self.admissions: list[tuple[int, int]] = []
         # continuous-mode engine state, built lazily on the first step
+        # and releasable between traffic bursts (release_cache)
         self._cache = None
         self._slots: list[Optional[_Slot]] = []
+        self._dirty: list[bool] = []   # slot lanes a retired request used
         self._step_no = 0
+        self._cache_builds = 0
+        self.manager = None
+        if engine.uses_page_table:
+            from repro.cache import PagedCacheManager
+
+            self.manager = PagedCacheManager(
+                engine.policy.kv, max_batch=max_batch,
+                max_seq=engine.max_seq, n_pages=n_pages)
+        self._recurrent = engine.model.cfg.family in ("hybrid", "ssm")
 
     def submit(self, req: Request):
         family = self.engine.model.cfg.family
@@ -137,7 +164,28 @@ class Scheduler:
             raise ValueError(
                 f"prompt {req.prompt.size} + max_new {req.max_new_tokens} "
                 f"> engine max_seq {self.engine.max_seq}")
+        if self.manager is not None:
+            worst = self.manager.pages_needed(req.prompt.size,
+                                              req.max_new_tokens)
+            if worst > self.manager.n_pages:
+                raise ValueError(
+                    f"request {req.rid} needs {worst} pages worst-case but "
+                    f"the pool only has {self.manager.n_pages} — it can "
+                    "never be admitted")
         self.queue.append(req)
+
+    def can_admit(self, req: Request) -> bool:
+        """Would ``step()`` admit this request right now (given a free
+        slot)?  Always true for dense caches; in paged mode the request's
+        worst-case page reservation must fit the pool next to everything
+        live or already queued."""
+        if self.manager is None:
+            return True
+        pending = sum(self.manager.pages_needed(r.prompt.size,
+                                                r.max_new_tokens)
+                      for r in self.queue)
+        return self.manager.can_admit(req.prompt.size, req.max_new_tokens,
+                                      pending_pages=pending)
 
     def cancel(self, rid: int) -> bool:
         """Retire a request: a queued one is dropped immediately, a live
@@ -196,8 +244,23 @@ class Scheduler:
                 "token-granularity stepping (batch-drain only) — use run()")
         b = self.max_batch
         if self._cache is None:
-            self._cache = self.engine.init_cache(b)
+            if self.manager is not None:
+                # pool_pages = n_pages + 1: the extra scratch page is
+                # where idle lanes' dummy scatters land (manager docs)
+                self._cache = self.engine.init_paged_cache(
+                    b, self.manager.pool_pages)
+                from repro.cache import paged as paged_pool
+
+                pool = self._cache if "k" in self._cache \
+                    else self._cache["self"]
+                (self.manager.page_bytes,
+                 self.manager.page_bytes_fp) = paged_pool.pool_page_bytes(
+                     pool, self.manager.pool_pages)
+            else:
+                self._cache = self.engine.init_cache(b)
             self._slots = [None] * b
+            self._dirty = [False] * b
+            self._cache_builds += 1
         slots = self._slots
         events: list[StepEvent] = []
 
@@ -221,14 +284,32 @@ class Scheduler:
                 self.finished[req.rid] = req
                 events.append(StepEvent(req.rid, None, True,
                                         cancelled=True))
-                slots[i] = None
+                self._retire_slot(i)
 
         # admission: every retired (or never-used) slot takes the next
         # queued request NOW — between decode steps, not after a wave.
+        # Paged mode additionally requires the head-of-queue's worst-case
+        # page reservation to fit; the queue stays FIFO (no skipping), so
+        # a too-big head waits rather than being starved by later
+        # requests.
         for i in range(b):
             if slots[i] is None and self.queue:
-                req = self.queue.popleft()
-                slots[i] = _Slot(req=req, key=self._request_key(req))
+                req = self.queue[0]
+                fed0 = 0
+                if self.manager is not None:
+                    if not self.manager.can_admit(req.prompt.size,
+                                                  req.max_new_tokens):
+                        break
+                    fed0 = self.manager.admit(i, req.prompt,
+                                              req.max_new_tokens)
+                elif self._recurrent and self._dirty[i]:
+                    # recurrent state has no position mask to hide the
+                    # previous occupant — zero the lane (== fresh cache)
+                    self._cache = self.engine.reset_slot(self._cache, i)
+                    self._dirty[i] = False
+                self.queue.popleft()
+                slots[i] = _Slot(req=req, key=self._request_key(req),
+                                 fed=fed0)
                 self.admissions.append((self._step_no, req.rid))
 
         if not any(slots):
@@ -263,9 +344,17 @@ class Scheduler:
             else:
                 keys.append(s.key)
 
-        logits, self._cache = self.engine._decode(
-            self.engine.params, self._cache, jnp.asarray(tokens),
-            jnp.asarray(pos))
+        if self.manager is not None:
+            for i, s in enumerate(slots):
+                if s is not None:
+                    self.manager.ensure(i, s.fed)   # page for this scatter
+            logits, self._cache = self.engine._decode(
+                self.engine.params, self._cache, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(self.manager.table()))
+        else:
+            logits, self._cache = self.engine._decode(
+                self.engine.params, self._cache, jnp.asarray(tokens),
+                jnp.asarray(pos))
         sampled = np.asarray(sampling.sample_slots(
             jnp.stack(keys), logits, jnp.asarray(temperature),
             jnp.asarray(top_p), jnp.asarray(top_k)))
@@ -274,6 +363,9 @@ class Scheduler:
             if s is None:
                 continue
             s.fed += 1
+            if self.manager is not None:
+                # owned prompt pages now fully written become shareable
+                self.manager.advance(i, s.fed)
             if s.fed >= s.req.prompt.size:
                 # this step consumed the prompt's last token (or a
                 # generated one): its logits yield the next token
@@ -284,9 +376,53 @@ class Scheduler:
                 if final:
                     s.req.done = True
                     self.finished[s.req.rid] = s.req
-                    slots[i] = None      # retired: refill next step
+                    self._retire_slot(i)  # retired: refill next step
         self._step_no += 1
         return events
+
+    def _retire_slot(self, i: int):
+        """Free slot ``i``'s lane: paged mode returns its pages (shared
+        complete prefix pages park in the allocator's LRU), recurrent
+        mode marks the lane dirty so the next occupant resets it."""
+        self._slots[i] = None
+        self._dirty[i] = True
+        if self.manager is not None:
+            self.manager.release(i)
+
+    def release_cache(self) -> bool:
+        """Drop the decode cache while the engine is idle, so a
+        long-lived serving loop doesn't pin peak-batch cache memory
+        between traffic bursts.  The paged manager's prefix LRU goes
+        with it (its pages index into the freed pool).  No-op (False)
+        while any request is live or queued; the next ``step()``
+        rebuilds the cache lazily."""
+        if self.live_slots or self.queue or self._cache is None:
+            return False
+        if self.manager is not None:
+            self.manager.reset()
+        self._cache = None
+        self._slots = []
+        self._dirty = []
+        return True
+
+    def cache_stats(self) -> dict:
+        """Cache telemetry for the stats endpoint (DESIGN.md §9)."""
+        out: dict = {
+            "allocated": self._cache is not None,
+            "builds": self._cache_builds,
+        }
+        if self.manager is None:
+            out["spec"] = "dense"
+            if self._cache is not None:
+                out["bytes"] = {"pool": int(sum(
+                    leaf.nbytes for leaf in jax.tree_util.tree_leaves(
+                        self._cache)))}
+            return out
+        out.update(self.manager.stats())
+        out["per_request_pages"] = {
+            s.req.rid: self.manager.slot_pages(i)
+            for i, s in enumerate(self._slots) if s is not None}
+        return out
 
     # ------------------------------------------------------------------
     # legacy batch-drain mode (families needing batch-global prefill)

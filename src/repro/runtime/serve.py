@@ -56,12 +56,23 @@ class Engine:
         def prefill_logits(params, batch):
             return mod.forward(params, batch, self.ctx, window=self.window)
 
-        def decode(params, cache, tokens, pos):
+        def decode(params, cache, tokens, pos, pages=None):
             return mod.decode_step(params, cache, tokens, pos, self.ctx,
-                                   window=self.window)
+                                   window=self.window, pages=pages)
+
+        def reset_slot(cache, slot):
+            # zero one slot's lane across every per-slot state leaf
+            # (batch is dim 1 everywhere: (L/ns, B, ...)).  Used when a
+            # recurrent family's slot is re-admitted mid-stream — unlike
+            # KV rows, conv/lru/wkv state has no position mask to hide
+            # the previous occupant.
+            return jax.tree_util.tree_map(
+                lambda leaf: leaf.at[:, slot].set(
+                    jnp.zeros_like(leaf[:, slot])), cache)
 
         self._prefill = jax.jit(prefill_logits)
         self._decode = jax.jit(decode, donate_argnums=1)
+        self._reset_slot = jax.jit(reset_slot, donate_argnums=0)
 
     # ------------------------------------------------------------------
     @property
@@ -69,14 +80,24 @@ class Engine:
         """True when the scheduler may run this model at token granularity
         with per-slot position vectors (continuous batching).
 
-        Only families whose ENTIRE decode state is the position-masked KV
-        cache qualify: a reused slot's stale cache rows are hidden by the
-        ``j <= pos`` mask, so admission is bit-exact.  audio/vlm need the
-        batch-global cross-attention prefill (frames/patches); ssm/hybrid
+        dense/moe qualify because their ENTIRE decode state is the
+        position-masked KV cache: a reused slot's stale rows are hidden by
+        the ``j <= pos`` mask, so admission is bit-exact.  ssm/hybrid
         carry per-lane *recurrent* state (rwkv6 wkv/shift, rglru conv/lru)
-        that no mask resets, so a refilled slot would inherit the previous
-        occupant's state — they fall back to batch-drain scheduling."""
-        return self.model.cfg.family in ("dense", "moe")
+        with no mask to reset it — the scheduler instead zeroes the
+        re-admitted slot's lane (``reset_slot``), which is exactly the
+        fresh-cache initial condition, so they run continuously too
+        (their fixed-size state is a single accounting page).  audio/vlm
+        stay batch-drained: the cross-attention prefill (frames/patches)
+        is batch-global."""
+        return self.model.cfg.family in ("dense", "moe", "hybrid", "ssm")
+
+    @property
+    def uses_page_table(self) -> bool:
+        """True when decode steps take a page-table argument: a paged
+        policy AND a family whose KV grows with the sequence.  Recurrent
+        families under a paged policy keep dense fixed-size state."""
+        return self.policy.kv.paged and self.model.supports_paged
 
     def init_cache(self, batch: int):
         cache = self.model.init_cache(batch, self.max_seq,
@@ -86,6 +107,16 @@ class Engine:
             # cross K/V filled at prefill (precompute_cross)
             pass
         return cache
+
+    def init_paged_cache(self, batch: int, n_pages: int):
+        spec = self.policy.kv
+        return self.model.init_paged_cache(batch, n_pages, spec.page_size,
+                                           bits=spec.bits)
+
+    def reset_slot(self, cache, slot: int):
+        """Zero one slot's lane of a dense per-slot cache (recurrent
+        state reset on re-admission)."""
+        return self._reset_slot(cache, slot)
 
     def prefill(self, batch_inputs: dict, cache, prompt_len: jax.Array):
         """Run the prompt; returns (last_logits (B, V), cache).

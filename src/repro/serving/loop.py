@@ -95,7 +95,8 @@ class EngineLoop:
     """Background thread owning a continuous-mode ``Scheduler``."""
 
     def __init__(self, scheduler: Scheduler, *, queue_capacity: int = 64,
-                 retry_after: float = 1.0, idle_wait: float = 0.02):
+                 retry_after: float = 1.0, idle_wait: float = 0.02,
+                 cache_idle: float = 30.0):
         if not scheduler.engine.supports_continuous:
             raise ValueError(
                 "HTTP serving needs token-granularity stepping; family "
@@ -105,6 +106,16 @@ class EngineLoop:
         self.admission = AdmissionQueue(queue_capacity,
                                         retry_after=retry_after)
         self.idle_wait = idle_wait
+        #: seconds of idle before the decode cache (dense rows or the
+        #: whole page pool + prefix LRU) is released back to the
+        #: allocator — a long-lived loop must not pin peak-batch cache
+        #: memory between traffic bursts (the next request rebuilds it)
+        self.cache_idle = cache_idle
+        self._idle_since: Optional[float] = None
+        #: head-of-line request a full page pool could not admit yet —
+        #: held here (NOT in the scheduler queue) so the admission queue
+        #: keeps backpressuring into 429s while it waits for pages
+        self._pending: Optional[Stream] = None
         self._rids = itertools.count()
         self._streams: dict[int, Stream] = {}      # not yet finalized
         self._lock = threading.Lock()
@@ -211,19 +222,38 @@ class EngineLoop:
     def _run(self):
         sched = self.scheduler
         while not self._stop:
-            # admit from the wait line only when a slot can take it
+            # admit from the wait line only when a slot can take it (and,
+            # in paged mode, only when the head's worst-case page
+            # reservation fits — it stays parked in _pending, not the
+            # scheduler queue, so /v1/stats queue depth remains the real
+            # backlog and the bounded wait line 429s under pressure)
             while self._free_capacity() > 0:
-                stream = self.admission.pop(timeout=0)
+                stream = self._pending or self.admission.pop(timeout=0)
+                self._pending = None
                 if stream is None:
+                    break
+                if stream.request.cancelled:
+                    self._finalize(stream, "cancelled")
+                    continue
+                if not sched.can_admit(stream.request):
+                    self._pending = stream
                     break
                 stream.started = time.monotonic()
                 sched.submit(stream.request)
                 self.admitted += 1
 
             if not sched.has_work:
+                now = time.monotonic()
+                if self._idle_since is None:
+                    self._idle_since = now
+                elif (self._pending is None
+                        and now - self._idle_since >= self.cache_idle):
+                    if sched.release_cache():
+                        self._idle_since = now
                 self._wake.wait(self.idle_wait)
                 self._wake.clear()
                 continue
+            self._idle_since = None
 
             for ev in sched.step():
                 with self._lock:
@@ -301,4 +331,5 @@ class EngineLoop:
                 "ttft": _histogram(self._ttft_ms),
                 "itl": _histogram(self._itl_ms),
             },
+            "cache": sched.cache_stats(),
         }

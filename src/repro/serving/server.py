@@ -83,6 +83,7 @@ class _Handler(BaseHTTPRequestHandler):
                 "arch": srv.engine.model.cfg.arch_id,
                 "family": srv.engine.model.cfg.family,
                 "collective": srv.engine.policy.collective.shorthand(),
+                "kv": srv.engine.policy.kv.shorthand(),
             })
         elif self.path == "/v1/stats":
             self._json(200, srv.loop.stats())
@@ -205,12 +206,15 @@ class ServingServer:
                  prompt_budget: int = 128,
                  scfg: SamplingConfig = SamplingConfig(),
                  seed: int = 0, queue_capacity: int = 64,
-                 retry_after: float = 1.0):
+                 retry_after: float = 1.0, n_pages: Optional[int] = None,
+                 cache_idle: float = 30.0):
         self.engine = engine
         self.loop = EngineLoop(
             Scheduler(engine, max_batch=max_batch,
-                      prompt_budget=prompt_budget, scfg=scfg, seed=seed),
-            queue_capacity=queue_capacity, retry_after=retry_after)
+                      prompt_budget=prompt_budget, scfg=scfg, seed=seed,
+                      n_pages=n_pages),
+            queue_capacity=queue_capacity, retry_after=retry_after,
+            cache_idle=cache_idle)
         self._httpd = _HTTPServer((host, port), _Handler)
         self._httpd.serving = self
         self._thread: Optional[threading.Thread] = None

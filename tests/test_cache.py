@@ -1,0 +1,405 @@
+"""Paged KV/state cache subsystem (repro.cache, DESIGN.md §9).
+
+Covers: PageSpec parsing, allocator invariants, chained prefix keys,
+paged-vs-dense decode bit-identity per family and page size (including a
+non-dividing one), quantized page round-trip error bounds, scheduler
+integration (paged bit-identity, prefix sharing, pool exhaustion
+queueing), and the idle cache-release lifecycle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import (OutOfPages, PageAllocator, PagedCacheManager,
+                         PageSpec, chain_keys)
+from repro.cache import paged as paged_pool
+from repro.cache.prefix import PrefixStore
+from repro.configs import get_smoke_config
+from repro.models.common import REPLICATED
+from repro.models.registry import build_model
+from repro.runtime import sampling
+from repro.runtime.scheduler import Request, Scheduler
+from repro.runtime.serve import make_engine
+
+GREEDY = sampling.SamplingConfig(temperature=0.0)
+
+
+# ---------------------------------------------------------------------------
+# PageSpec
+# ---------------------------------------------------------------------------
+
+def test_page_spec_parse_and_shorthand():
+    assert PageSpec.parse(None) == PageSpec()
+    assert PageSpec.parse("dense") == PageSpec()
+    assert PageSpec.parse("paged:16") == PageSpec(page_size=16)
+    assert PageSpec.parse("paged:8:int4") == PageSpec(page_size=8, bits=4)
+    for spec in (PageSpec(), PageSpec(page_size=16),
+                 PageSpec(page_size=64, bits=8)):
+        assert PageSpec.parse(spec.shorthand()) == spec
+    assert PageSpec(page_size=5).pages_for(11) == 3
+    assert PageSpec(page_size=5).pages_for(10) == 2
+    for bad in ("paged", "paged:x", "paged:8:int3", "paged:8:fp8",
+                "dense:8", "rows"):
+        with pytest.raises(ValueError):
+            PageSpec.parse(bad)
+    with pytest.raises(ValueError):
+        PageSpec(bits=8)            # bits without a page size
+    with pytest.raises(ValueError):
+        PageSpec(page_size=0)
+
+
+def test_policy_carries_page_spec():
+    from repro.core.policy import ExecutionPolicy
+
+    pol = ExecutionPolicy(kv="paged:16:int8")
+    assert pol.kv == PageSpec(page_size=16, bits=8)
+    assert ExecutionPolicy().kv == PageSpec()
+    cfg = get_smoke_config("qwen3-4b").with_quant(
+        mode="mlp", kv_page_size=4, kv_bits=8)
+    assert ExecutionPolicy.from_config(cfg).kv == PageSpec(page_size=4,
+                                                           bits=8)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_free_list_and_refcounts():
+    a = PageAllocator(4)
+    pids = [a.alloc() for _ in range(4)]
+    assert len(set(pids)) == 4 and a.free_pages == 0
+    with pytest.raises(OutOfPages):
+        a.alloc()
+    a.retain(pids[0])
+    a.release(pids[0])
+    assert a.refcount(pids[0]) == 1      # still held once
+    a.release(pids[0])
+    assert a.refcount(pids[0]) == 0 and a.free_pages == 1
+    assert a.peak_live == 4
+
+
+def test_allocator_reservations_prevent_deadlock():
+    a = PageAllocator(4)
+    a.reserve(3)
+    assert a.available() == 1
+    assert not a.can_reserve(2)          # headroom accounts reservations
+    with pytest.raises(OutOfPages):
+        a.reserve(2)
+    # draw the reservation down one page at a time
+    got = [a.alloc(reserved=True) for _ in range(3)]
+    assert len(got) == 3 and a.reserved == 0
+    a.unreserve(0)
+    with pytest.raises(AssertionError):
+        a.unreserve(1)                   # nothing outstanding
+    with pytest.raises(AssertionError):
+        a.alloc(reserved=True)
+
+
+def test_allocator_cached_lru_eviction_order():
+    evicted = []
+    a = PageAllocator(3, evict_cb=evicted.append)
+    p0, p1, p2 = (a.alloc() for _ in range(3))
+    a.release(p0, keep_cached=True)      # oldest cached
+    a.release(p1, keep_cached=True)
+    assert a.cached_pages == 2 and a.available() == 2
+    # resurrect p1: it leaves the LRU with content intact
+    a.retain(p1)
+    assert a.cached_pages == 1 and a.refcount(p1) == 1
+    # pool pressure: the free list is empty, so the oldest cached page
+    # (p0) is evicted and the prefix layer notified
+    p3 = a.alloc()
+    assert p3 == p0 and evicted == [p0]
+    assert a.evictions == 1
+
+
+# ---------------------------------------------------------------------------
+# prefix keys / store
+# ---------------------------------------------------------------------------
+
+def test_chain_keys_commit_to_entire_prefix():
+    toks = np.arange(10, dtype=np.int32)
+    keys = chain_keys(toks, 4)
+    assert len(keys) == 2                # ragged tail page has no key
+    # same leading tokens -> same chain; any earlier change reshuffles
+    # every later key
+    assert chain_keys(toks[:8], 4) == keys
+    other = toks.copy()
+    other[0] += 1
+    keys2 = chain_keys(other, 4)
+    assert keys2[0] != keys[0] and keys2[1] != keys[1]
+    same_tail = np.concatenate([other[:4], toks[4:]])
+    assert chain_keys(same_tail, 4)[1] != keys[1]
+    assert chain_keys(toks, 16) == []
+
+
+def test_prefix_store_lookup_only_complete():
+    ps = PrefixStore()
+    ps.register(7, b"key")
+    assert ps.lookup(b"key") is None     # incomplete: not shareable yet
+    ps.mark_complete(7)
+    assert ps.lookup(b"key") == 7
+    ps.register(8, b"key")               # first writer wins
+    assert ps.lookup(b"key") == 7
+    ps.unregister(7)
+    assert ps.lookup(b"key") is None
+
+
+# ---------------------------------------------------------------------------
+# paged decode == dense decode, bit for bit
+# ---------------------------------------------------------------------------
+
+def _paired_decode(arch, page_size, max_seq=15, batch=2, steps=None):
+    """Run dense and paged decode side by side; returns final logits."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (batch, steps or max_seq)).astype(np.int32)
+
+    spec = PageSpec(page_size=page_size)
+    mgr = PagedCacheManager(spec, max_batch=batch, max_seq=max_seq)
+    dense = model.init_cache(batch, max_seq)
+    pool = model.init_paged_cache(batch, mgr.pool_pages, page_size)
+    for i in range(batch):
+        mgr.admit(i, toks[i, :1], max_seq)
+
+    ld = lp = None
+    for t in range(steps or max_seq):
+        pos = jnp.full((batch,), t, jnp.int32)
+        for i in range(batch):
+            mgr.ensure(i, t)
+        table = jnp.asarray(mgr.table())
+        tok = jnp.asarray(toks[:, t])
+        ld, dense = model.decode_step(params, dense, tok, pos, REPLICATED)
+        lp, pool = model.decode_step(params, pool, tok, pos, REPLICATED,
+                                     pages=table)
+    return np.asarray(ld), np.asarray(lp)
+
+
+@pytest.mark.parametrize("page_size", [1, 16, 5])
+def test_paged_decode_bit_identical_transformer(page_size):
+    """fp paged decode == dense decode bit-for-bit: the masked gather
+    tail scores -1e30 whose exp underflows to exactly 0.0, so padded
+    pages never contribute — at page size 1, 16 (> some prompts), and a
+    max_seq-non-dividing 5."""
+    ld, lp = _paired_decode("qwen3-4b", page_size)
+    np.testing.assert_array_equal(ld, lp)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-moe-235b-a22b",
+                                  "whisper-large-v3",
+                                  "llama-3.2-vision-90b"])
+def test_paged_decode_bit_identical_families(arch):
+    """Every paged-capable family decodes bit-identically through its
+    page pool (whisper/vlm: paged self-attn next to dense cross K/V)."""
+    ld, lp = _paired_decode(arch, 4, max_seq=8)
+    np.testing.assert_array_equal(ld, lp)
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "rwkv6-3b"])
+def test_recurrent_families_ignore_pages(arch):
+    """rglru/rwkv6 state is fixed-size per slot — decode accepts the
+    pages kwarg (interface uniformity) and ignores it, and the registry
+    refuses to build a pool for them."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    assert not model.supports_paged
+    with pytest.raises(ValueError, match="no paged cache"):
+        model.init_paged_cache(2, 8, 4)
+    params = model.init(jax.random.PRNGKey(0))
+    cache_a = model.init_cache(2, 12)
+    cache_b = model.init_cache(2, 12)
+    toks = jnp.asarray([[3, 5], [7, 9]], jnp.int32)
+    table = jnp.zeros((2, 3), jnp.int32)
+    la = lb = None
+    for t in range(2):
+        pos = jnp.full((2,), t, jnp.int32)
+        la, cache_a = model.decode_step(params, cache_a, toks[:, t], pos,
+                                        REPLICATED)
+        lb, cache_b = model.decode_step(params, cache_b, toks[:, t], pos,
+                                        REPLICATED, pages=table)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# quantized pages
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits,qmax", [(8, paged_pool.INT8_QMAX),
+                                       (4, paged_pool.INT4_QMAX)])
+def test_quantized_page_round_trip_error_bound(bits, qmax):
+    """scatter -> gather through an intN pool dequantizes every stored
+    (token, head) row within the asymmetric-grid bound
+    (max - min) / (2 * qmax)."""
+    n_pages, ps, kv, hd = 6, 4, 2, 16
+    pool = paged_pool.init_pool((), n_pages, ps, kv, hd, bits=bits)
+    assert paged_pool.pool_bits(pool) == bits
+    rng = np.random.default_rng(0)
+    b = 3
+    pages = jnp.asarray(np.arange(b * 2).reshape(b, 2), jnp.int32)
+    stored = []
+    for t in range(2 * ps):
+        k = jnp.asarray(rng.normal(size=(b, kv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, kv, hd)), jnp.float32)
+        pool = paged_pool.scatter_token(pool, k, v,
+                                        pages, jnp.full((b,), t, jnp.int32))
+        stored.append((np.asarray(k), np.asarray(v)))
+    gk, gv = paged_pool.gather(pool, pages)
+    for t, (k, v) in enumerate(stored):
+        for got, ref in ((np.asarray(gk)[:, t], k), (np.asarray(gv)[:, t],
+                                                     v)):
+            bound = (ref.max(-1) - ref.min(-1)) / (2 * qmax) + 1e-6
+            err = np.abs(got - ref).max(-1)
+            assert (err <= bound).all(), (bits, t, err.max())
+
+
+def test_quantized_pool_page_bytes_smaller_than_fp():
+    n_pages = 4
+    raw = paged_pool.init_pool((3,), n_pages, 8, 2, 16)
+    i8 = paged_pool.init_pool((3,), n_pages, 8, 2, 16, bits=8)
+    i4 = paged_pool.init_pool((3,), n_pages, 8, 2, 16, bits=4)
+    b_raw, fp_raw = paged_pool.pool_page_bytes(raw, n_pages)
+    b_i8, fp_i8 = paged_pool.pool_page_bytes(i8, n_pages)
+    b_i4, fp_i4 = paged_pool.pool_page_bytes(i4, n_pages)
+    assert b_raw == fp_raw == fp_i8 == fp_i4   # same logical values @bf16
+    assert b_i4 < b_i8 < b_raw
+
+
+def test_int4_pool_requires_packable_head_dim():
+    with pytest.raises(ValueError, match="head_dim"):
+        paged_pool.init_pool((), 2, 4, 2, 12, bits=4)
+
+
+# ---------------------------------------------------------------------------
+# manager + scheduler integration
+# ---------------------------------------------------------------------------
+
+def _make_paged_engine(page_size=4, bits=None, max_seq=24):
+    cfg = get_smoke_config("qwen3-4b").with_quant(
+        mode="mlp", kv_page_size=page_size, kv_bits=bits)
+    return make_engine(cfg, jax.random.PRNGKey(0), max_seq=max_seq)
+
+
+def test_scheduler_paged_bit_identical_and_prefix_shared():
+    """Through the scheduler: paged greedy decode reproduces solo
+    ``Engine.generate`` bit-for-bit.  Wave 1 fills the prefix store
+    (concurrent identical prompts race — pages are incomplete, so both
+    replay); wave 2 resurrects the retired pages from the allocator LRU:
+    one request shares the full prompt (replay skip), one only the first
+    page (divergent tail), and their staggered lengths leave an idle
+    decode lane running next to a live one — the scratch-page
+    regression."""
+    eng = _make_paged_engine()
+    assert eng.uses_page_table
+    cfg = eng.model.cfg
+    rng = np.random.default_rng(3)
+    base = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+    prompts = {0: base.copy(), 1: base.copy(),
+               2: np.concatenate([base[:4],
+                                  rng.integers(1, cfg.vocab_size,
+                                               3).astype(np.int32)]),
+               3: base.copy()}
+    max_new = {0: 5, 1: 5, 2: 6, 3: 3}
+    sched = Scheduler(eng, max_batch=2, prompt_budget=8, scfg=GREEDY)
+    for rid in (0, 1):
+        sched.submit(Request(rid=rid, prompt=prompts[rid],
+                             max_new_tokens=max_new[rid]))
+    sched.run()
+    for rid in (2, 3):
+        sched.submit(Request(rid=rid, prompt=prompts[rid],
+                             max_new_tokens=max_new[rid]))
+    done = sched.run()
+    for rid, p in prompts.items():
+        ref = np.asarray(eng.generate(
+            jax.random.PRNGKey(9), {"tokens": jnp.asarray(p)[None]},
+            jnp.asarray([p.size]), max_new_tokens=max_new[rid],
+            scfg=GREEDY))[0]
+        np.testing.assert_array_equal(np.asarray(done[rid].output), ref,
+                                      err_msg=f"req {rid}")
+    st = sched.cache_stats()
+    # rid 3 resurrected both of rid 0's prompt pages, rid 2 the first
+    assert st["prefix"]["hits"] >= 3
+    assert st["prefix"]["hit_rate"] > 0
+    assert st["bytes"]["saved_prefix"] > 0
+    assert st["pages"]["live"] == 0      # everything retired
+
+
+def test_scheduler_paged_quantized_pages_run_and_save_bytes():
+    eng = _make_paged_engine(bits=8)
+    cfg = eng.model.cfg
+    rng = np.random.default_rng(0)
+    sched = Scheduler(eng, max_batch=2, prompt_budget=8, scfg=GREEDY)
+    for i in range(2):
+        sched.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=6).astype(np.int32),
+            max_new_tokens=4))
+    done = sched.run()
+    assert all(len(r.output) == 4 for r in done.values())
+    st = sched.cache_stats()
+    assert st["spec"] == "paged:4:int8"
+    assert st["bytes"]["saved_quantized"] > 0
+    assert st["bytes"]["per_page"] < st["bytes"]["dense_equiv"] \
+        // (sched.manager.pmax * sched.max_batch)
+
+
+def test_scheduler_pool_exhaustion_queues_not_fails():
+    """A pool too small for two concurrent requests admits them one at a
+    time: the second waits in the queue (can_admit False) and still
+    finishes; a request that can never fit is rejected at submit."""
+    eng = _make_paged_engine(page_size=4, max_seq=24)
+    cfg = eng.model.cfg
+    pmax = PageSpec(page_size=4).pages_for(24)
+    # room for exactly one worst-case request
+    sched = Scheduler(eng, max_batch=2, prompt_budget=8, scfg=GREEDY,
+                      n_pages=pmax)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, size=8).astype(np.int32), max_new_tokens=16)
+        for i in range(2)]
+    sched.submit(reqs[0])
+    sched.step()
+    assert sched.live_slots == 1
+    assert not sched.can_admit(reqs[1])      # pool fully reserved
+    sched.submit(reqs[1])
+    sched.step()
+    assert sched.live_slots == 1             # head waits, FIFO kept
+    done = sched.run()
+    assert sorted(done) == [0, 1]
+    assert all(len(r.output) == 16 for r in done.values())
+    # a pool smaller than one request's worst case rejects at submit
+    tiny = Scheduler(eng, max_batch=2, prompt_budget=8, scfg=GREEDY,
+                     n_pages=2)
+    with pytest.raises(ValueError, match="never be admitted"):
+        tiny.submit(Request(rid=9, prompt=np.zeros(8, np.int32),
+                            max_new_tokens=4))   # pages_for(11) == 3 > 2
+
+
+def test_scheduler_release_cache_lifetime():
+    """The decode cache frees once traffic drains (so a long-lived loop
+    doesn't pin peak-batch memory) and rebuilds lazily on the next
+    request — for both dense and paged modes."""
+    for eng in (make_engine(get_smoke_config("qwen3-4b"),
+                            jax.random.PRNGKey(0), max_seq=16),
+                _make_paged_engine(max_seq=16)):
+        cfg = eng.model.cfg
+        sched = Scheduler(eng, max_batch=2, prompt_budget=4, scfg=GREEDY)
+        assert not sched.release_cache()       # nothing allocated yet
+        sched.submit(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                             max_new_tokens=2))
+        sched.step()
+        assert sched.cache_stats()["allocated"]
+        assert not sched.release_cache()       # refuses while live
+        sched.run()
+        assert sched.release_cache()
+        st = sched.cache_stats()
+        assert not st["allocated"]
+        if sched.manager is not None:
+            assert st["pages"]["live"] == 0 and st["pages"]["cached"] == 0
+        # traffic returns: the cache rebuilds and serving still works
+        sched.submit(Request(rid=1, prompt=np.asarray([4, 5], np.int32),
+                             max_new_tokens=2))
+        done = sched.run()
+        assert len(done[1].output) == 2
+        assert sched.cache_stats()["builds"] == 2

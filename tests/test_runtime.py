@@ -129,14 +129,39 @@ def test_scheduler_vector_pos_matches_scalar_decode():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_scheduler_batch_drain_fallback_families():
-    """audio/vlm (batch-global cross prefill) and ssm/hybrid (per-lane
-    recurrent state that no position mask resets on slot reuse) fall back
-    to batch-drain and still drain the queue."""
+def test_scheduler_recurrent_families_continuous_bit_identical():
+    """ssm/hybrid are first-class continuous-batching citizens: each
+    lane's recurrent state is independent at dim 1, and a re-admitted
+    slot's lane is zeroed (``Engine.reset_slot``) — exactly the
+    fresh-cache initial condition, so every request's greedy output is
+    bit-identical to a solo run even through slot reuse."""
+    greedy = sampling.SamplingConfig(temperature=0.0)
     for arch in ("rwkv6-3b", "recurrentgemma-2b"):
-        rec = make_engine(get_smoke_config(arch), jax.random.PRNGKey(0),
-                          max_seq=24)
-        assert not rec.supports_continuous, arch
+        cfg = get_smoke_config(arch)
+        eng = make_engine(cfg, jax.random.PRNGKey(0), max_seq=24)
+        assert eng.supports_continuous, arch
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+                   for n in (5, 6, 4)]
+        new = (2, 8, 3)   # req 0 retires early; req 2 reuses its lane
+        sched = Scheduler(eng, max_batch=2, prompt_budget=8, scfg=greedy)
+        for i, (p, mn) in enumerate(zip(prompts, new)):
+            sched.submit(Request(rid=i, prompt=p, max_new_tokens=mn))
+        done = sched.run()
+        admitted = dict((rid, step) for step, rid in sched.admissions)
+        assert admitted[2] > 0, arch     # entered a previously-used lane
+        for i, (p, mn) in enumerate(zip(prompts, new)):
+            ref = np.asarray(eng.generate(
+                jax.random.PRNGKey(9), {"tokens": jnp.asarray(p)[None]},
+                jnp.asarray([p.size]), max_new_tokens=mn, scfg=greedy))[0]
+            np.testing.assert_array_equal(
+                np.asarray(done[i].output), ref,
+                err_msg=f"{arch} req {i}")
+
+
+def test_scheduler_batch_drain_fallback_families():
+    """audio/vlm (batch-global cross prefill) still fall back to
+    batch-drain and drain the queue."""
     cfg = get_smoke_config("whisper-large-v3")
     eng = make_engine(cfg, jax.random.PRNGKey(0), max_seq=24)
     assert not eng.supports_continuous

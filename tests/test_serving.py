@@ -29,6 +29,34 @@ def engine():
     return make_engine(cfg, jax.random.PRNGKey(0), max_seq=MAX_SEQ)
 
 
+@pytest.fixture(scope="module")
+def paged_engine():
+    from repro.cache import PageSpec
+    from repro.core.policy import ExecutionPolicy
+
+    cfg = get_smoke_config("qwen3-4b")
+    policy = ExecutionPolicy.from_config(cfg).with_(
+        kv=PageSpec(page_size=8, bits=8))
+    return make_engine(cfg, jax.random.PRNGKey(0), max_seq=MAX_SEQ,
+                      policy=policy)
+
+
+@pytest.fixture()
+def paged_server(paged_engine, request):
+    params = getattr(request, "param", {})
+    srv = ServingServer(paged_engine,
+                        max_batch=params.get("max_batch", 2),
+                        prompt_budget=params.get("prompt_budget", 16),
+                        queue_capacity=params.get("queue_capacity", 4),
+                        retry_after=0.25,
+                        n_pages=params.get("n_pages"),
+                        cache_idle=params.get("cache_idle", 30.0),
+                        scfg=sampling.SamplingConfig(temperature=0.0))
+    srv.start()
+    yield srv
+    srv.shutdown(drain=False, timeout=10.0)
+
+
 @pytest.fixture()
 def server(engine, request):
     params = getattr(request, "param", {})
@@ -285,6 +313,120 @@ def test_stats_counters_and_histograms(server):
         assert sum(hist["buckets"].values()) == hist["count"]
     status, _ = _get_json(server.port, "/v1/nope")
     assert status == 404
+
+
+def test_stats_cache_fields_dense(server):
+    conn, resp = _post(server.port, {"prompt": [1, 2],
+                                     "max_new_tokens": 2, "seed": 0})
+    assert _events(resp)[-1][0] == "done"
+    conn.close()
+    _, stats = _get_json(server.port, "/v1/stats")
+    cache = stats["cache"]
+    assert cache["allocated"] is True
+    assert cache["spec"] == "dense"
+    assert cache["builds"] == 1
+    assert cache["bytes"]["pool"] > 0
+
+
+# ----------------------------------------------------------------------
+# paged cache over HTTP (DESIGN.md §9)
+# ----------------------------------------------------------------------
+
+def test_paged_stats_and_prefix_share_hits(paged_server):
+    """Two identical 2-page prompts served back-to-back: the second
+    resurrects the first's prompt pages from the prefix LRU — the stats
+    endpoint reports the pool, the hit count, and bytes saved by both
+    sharing and int8 pages."""
+    _, health = _get_json(paged_server.port, "/v1/health")
+    assert health["kv"] == "paged:8:int8"
+
+    prompt = list(range(1, 17))          # 16 tokens == 2 full pages
+    for seed in (0, 1):
+        conn, resp = _post(paged_server.port,
+                           {"prompt": prompt, "max_new_tokens": 4,
+                            "seed": seed})
+        assert _events(resp)[-1][0] == "done"
+        conn.close()
+
+    _, stats = _get_json(paged_server.port, "/v1/stats")
+    cache = stats["cache"]
+    assert cache["spec"] == "paged:8:int8"
+    assert cache["page_size"] == 8
+    pages = cache["pages"]
+    assert pages["total"] == 2 * (MAX_SEQ // 8)   # max_batch * pmax
+    assert pages["live"] == 0                     # all retired
+    assert pages["free"] + pages["cached"] == pages["total"]
+    assert pages["cached"] >= 2                   # prompt pages parked
+    prefix = cache["prefix"]
+    assert prefix["hits"] >= 2                    # both pages reused
+    assert prefix["hit_rate"] > 0
+    assert cache["bytes"]["saved_prefix"] > 0
+    assert cache["bytes"]["saved_quantized"] > 0
+    assert cache["bytes"]["per_page"] < cache["bytes"]["dense_equiv"]
+    assert cache["per_request_pages"] == {}       # nothing in flight
+
+
+@pytest.mark.parametrize("paged_server",
+                         [{"max_batch": 2, "queue_capacity": 1,
+                           "n_pages": 6}],
+                         indirect=True)
+def test_paged_pool_exhaustion_backpressure_429(paged_server):
+    """A pool sized for ONE worst-case request: the second request parks
+    waiting for pages (never a mid-decode failure), the wait line fills,
+    and the next arrival is shed with 429 — then everything still
+    finishes once pages free up."""
+    held = [_post(paged_server.port,
+                  {"prompt": [1, 2], "max_new_tokens": 40, "seed": i},
+                  timeout=300)
+            for i in range(2)]           # each needs 6 pages worst-case
+    deadline = time.monotonic() + 30
+    status = None
+    while time.monotonic() < deadline:
+        conn, resp = _post(paged_server.port,
+                           {"prompt": [3], "max_new_tokens": 2})
+        status = resp.status
+        body = resp.read()
+        conn.close()
+        if status == 429:
+            break
+        time.sleep(0.02)
+    assert status == 429, body
+    for conn, resp in held:
+        assert _events(resp)[-1][0] == "done"
+        conn.close()
+    _, stats = _get_json(paged_server.port, "/v1/stats")
+    assert stats["queue"]["rejected"] >= 1
+    assert stats["requests"]["completed"] >= 2
+    assert stats["cache"]["pages"]["live"] == 0
+
+
+@pytest.mark.parametrize("paged_server", [{"cache_idle": 0.3}],
+                         indirect=True)
+def test_cache_released_when_idle(paged_server):
+    """A long-lived loop must not pin peak-batch cache memory: after the
+    idle grace the pool (and its prefix LRU) is freed, and the next
+    request lazily rebuilds it."""
+    conn, resp = _post(paged_server.port, {"prompt": [1, 2, 3],
+                                           "max_new_tokens": 2, "seed": 0})
+    assert _events(resp)[-1][0] == "done"
+    conn.close()
+    deadline = time.monotonic() + 20
+    cache = None
+    while time.monotonic() < deadline:
+        _, stats = _get_json(paged_server.port, "/v1/stats")
+        cache = stats["cache"]
+        if not cache["allocated"]:
+            break
+        time.sleep(0.05)
+    assert cache["allocated"] is False
+    assert cache["pages"]["live"] == 0 and cache["pages"]["cached"] == 0
+
+    conn, resp = _post(paged_server.port, {"prompt": [4, 5],
+                                           "max_new_tokens": 2, "seed": 1})
+    assert _events(resp)[-1][0] == "done"
+    conn.close()
+    _, stats = _get_json(paged_server.port, "/v1/stats")
+    assert stats["cache"]["builds"] == 2
 
 
 def test_drain_on_shutdown(engine):
