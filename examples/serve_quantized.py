@@ -103,6 +103,16 @@ def main():
           f"collective={policy.collective.shorthand()} "
           f"mesh=2x{TP} (data x model) "
           f"{'one-shot compile' if args.one_shot else 'from artifact'}")
+    if artifact is not None:
+        for site in artifact.manifest.get("collective_tuner", ()):
+            # ':fused' sites run the wire-epilogue kernel: the down GEMM
+            # emits ring phase 1's quantized payload (DESIGN.md §10)
+            print(f"  site {site['path']} [{site.get('kind', 'pair')}] -> "
+                  f"{site['chosen']}"
+                  + (" (fused wire epilogue)" if site.get("fused") else ""))
+        if artifact.aux:
+            print(f"  aux plans: {', '.join(artifact.aux)} "
+                  "(attention V->O folds served)")
 
     with mesh:
         engine = make_engine(cfg, jax.random.PRNGKey(0), ctx=ctx,

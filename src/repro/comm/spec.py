@@ -20,6 +20,11 @@ and CLIs:
   payload is packed 8-nibbles-per-uint32 with the same
   ``quantization.pack_int4`` layout the weights use (block default 32 —
   15 levels need tighter blocks than int8's 255).
+* Either quant shorthand takes a trailing ``:fused`` flag
+  (``"quant-int8:128:fused"``) — the wire payload is emitted directly
+  from the Pallas dequant-GEMM accumulator tiles instead of a separate
+  quantize pass over ``y_partial`` (DESIGN.md §10); bit-identical on the
+  wire, so ``bytes_on_wire`` is unchanged.
 
 ``CollectivePlan`` lifts the spec to a *per-layer* decision (tolerance
 to wire compression varies sharply by layer — Hansen-Palmus et al.
@@ -89,6 +94,7 @@ class CollectiveSpec:
     wire_dtype: Optional[Any] = None
     block_size: int = 128
     bits: Optional[int] = None   # None -> the strategy's payload width
+    fused: bool = False          # wire payload produced by the GEMM kernel
 
     def __post_init__(self):
         from repro.comm import dispatch  # deferred: dispatch imports spec
@@ -115,6 +121,10 @@ class CollectiveSpec:
             raise ValueError(
                 f"{self.name} carries {want_bits}-bit payloads, got "
                 f"bits={self.bits}")
+        if self.fused and self.name not in ("quant-int8", "quant-int4"):
+            raise ValueError(
+                f"fused wire epilogue only applies to quant-int8/quant-int4 "
+                f"collectives, not {self.name!r}")
 
     # ---- construction -----------------------------------------------------
 
@@ -132,12 +142,21 @@ class CollectiveSpec:
         name, _, arg = value.partition(":")
         if name == "cast":
             return cls(name="cast", wire_dtype=arg or "bfloat16")
-        if name == "quant-int8":
-            return cls(name="quant-int8",
-                       block_size=int(arg) if arg else 128)
-        if name == "quant-int4":
-            return cls(name="quant-int4", bits=4,
-                       block_size=int(arg) if arg else 32)
+        if name in ("quant-int8", "quant-int4"):
+            # quant shorthands: "<name>[:<block>][:fused]" — the trailing
+            # "fused" flag means the GEMM kernel emits the wire payload.
+            parts = [p for p in arg.split(":") if p] if arg else []
+            fused = False
+            if parts and parts[-1] == "fused":
+                fused, parts = True, parts[:-1]
+            if len(parts) > 1:
+                raise ValueError(
+                    f"collective shorthand {value!r} has too many ':' "
+                    f"arguments (expected '<name>[:<block>][:fused]')")
+            default_block = 128 if name == "quant-int8" else 32
+            return cls(name=name, bits=4 if name == "quant-int4" else None,
+                       block_size=int(parts[0]) if parts else default_block,
+                       fused=fused)
         if arg:
             raise ValueError(
                 f"collective {name!r} takes no ':' argument (got {value!r})")
@@ -148,7 +167,8 @@ class CollectiveSpec:
         if self.name == "cast":
             return f"cast:{jnp.dtype(self.wire_dtype).name}"
         if self.name in ("quant-int8", "quant-int4"):
-            return f"{self.name}:{self.block_size}"
+            suffix = ":fused" if self.fused else ""
+            return f"{self.name}:{self.block_size}{suffix}"
         return self.name
 
     def with_(self, **kw) -> "CollectiveSpec":

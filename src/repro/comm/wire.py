@@ -1,0 +1,89 @@
+"""WirePayload — a pre-quantized TP epilogue payload (DESIGN.md §10).
+
+The quantized collectives normally quantize ``y_partial`` themselves
+(phase 1 of the two-phase ring in ``comm/dispatch.py``).  The fused
+Pallas kernels (``kernels/dequant_matmul.dequant_matmul_wire_ordered``)
+emit that exact payload straight from the GEMM accumulator tiles, so the
+dense partial never round-trips HBM.  This module holds the contract
+between the two layers:
+
+* ``wire_params(n, tp, bits, preferred_block)`` — the padding / chunking
+  / quant-block geometry the ring uses for a width-``n`` output.  Both
+  the kernel wrapper and the collective derive their shapes from this
+  one function, so the flat kernel output reshapes bit-exactly into the
+  ring's chunked form.
+* ``WirePayload`` — the kernel's output: a FLAT payload over the padded
+  width ``n_pad`` (int8 values, or nibble-packed uint32 words for int4)
+  plus f16 scales (and zeros for int4), with the static geometry the
+  collective needs to chunk it (``n``, ``tp``, ``bits``, ``block``) and
+  the dtype the result must be cast back to (``out_dtype`` — the wire
+  never leaks into the residual stream).
+
+Flat -> chunked equivalence: the ring quantizes ``tp`` chunks of width
+``chunk = n_pad / tp`` with blocks of size ``block`` where
+``block | chunk`` (and ``8 | chunk`` for int4 packing), so neither a
+quant block nor a packed word ever straddles a chunk boundary — a plain
+``reshape(..., tp, chunk) -> moveaxis(-2, 0)`` of the flat payload IS
+the chunked phase-1 payload, bit for bit.
+
+Lives in ``comm`` (not ``kernels``) so ``kernels/dispatch.py`` can
+import it without a cycle: ``comm`` never imports ``kernels``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+
+from repro.core.quantization import PACK, choose_group_size
+
+__all__ = ["WirePayload", "wire_params"]
+
+
+def wire_params(n: int, tp: int, bits: int,
+                preferred_block: int) -> tuple[int, int, int]:
+    """``(n_pad, chunk, block)`` for the two-phase quantized ring over a
+    width-``n`` row-TP output: the zero-padded wire width (whole chunks
+    per rank; whole uint32 words per chunk for int4), the per-rank chunk,
+    and the quant block actually used (largest divisor of ``chunk`` at
+    most ``preferred_block`` — exactly ``choose_group_size``, matching
+    ``comm/dispatch._QuantInt8/_QuantInt4.apply``)."""
+    pad_to = tp * (PACK if bits == 4 else 1)
+    n_pad = n + (-n) % pad_to
+    chunk = n_pad // tp
+    return n_pad, chunk, choose_group_size(chunk, preferred_block)
+
+
+@dataclasses.dataclass
+class WirePayload:
+    """One rank's pre-quantized partial, ready for ring phase 1.
+
+    ``payload`` is flat over the padded width: ``(..., n_pad)`` int8 for
+    8-bit wires, ``(..., n_pad // 8)`` uint32 (``pack_int4`` nibble
+    layout) for 4-bit.  ``scales`` (and ``zeros``, int4 only) are
+    ``(..., n_pad // block)`` f16.  The non-array fields are static
+    geometry (see ``wire_params``)."""
+
+    payload: jax.Array
+    scales: jax.Array
+    zeros: Optional[jax.Array]
+    n: int                  # logical (un-padded) output width
+    tp: int                 # ring size the payload was padded for
+    bits: int               # 8 or 4
+    block: int              # quant block actually used
+    out_dtype: Any          # dtype the collective result is cast back to
+
+    @property
+    def n_pad(self) -> int:
+        w = self.payload.shape[-1]
+        return w * PACK if self.bits == 4 else w
+
+
+jax.tree_util.register_pytree_node(
+    WirePayload,
+    lambda wp: ((wp.payload, wp.scales, wp.zeros),
+                (wp.n, wp.tp, wp.bits, wp.block, wp.out_dtype)),
+    lambda aux, children: WirePayload(*children, *aux),
+)

@@ -142,6 +142,26 @@ def pair_pspecs(pp: PlannedPair, axis: str, x_batch_axes=()) -> PlannedPair:
     )
 
 
+_UNFUSABLE_WARNED: set = set()
+
+
+def _warn_unfusable(pair_path, pp: PlannedPair, tp: int) -> None:
+    """One-line, once-per-site warning when a ':fused' collective spec
+    cannot use the wire kernel here (wrong layout / tp=1 / untileable K)
+    — the dense GEMM + plain collective run instead of erroring."""
+    import warnings
+
+    key = (pair_path, pp.scheme, pp.down.k, pp.down.n, tp)
+    if key in _UNFUSABLE_WARNED:
+        return
+    _UNFUSABLE_WARNED.add(key)
+    warnings.warn(
+        f"collective spec is ':fused' but the wire kernel cannot serve "
+        f"pair {pair_path!r} (scheme={pp.scheme}, down layout "
+        f"{pp.down.kind!r}, K={pp.down.k}, tp={tp}); using the plain "
+        f"epilogue", stacklevel=3)
+
+
 def _pair_local_forward(
     x: jax.Array,
     pp: PlannedPair,
@@ -173,7 +193,6 @@ def _pair_local_forward(
             y1 = act(mm(x, pp.gate)) * y1
         elif activation:
             y1 = act(y1)
-        y2 = mm(y1, pp.down)
     elif pp.scheme == "exllama":
         # Paper Algorithm 2 (the "Naive Algorithm" under TP).
         xg = jnp.take(x, pp.p1_up, axis=-1)
@@ -185,9 +204,8 @@ def _pair_local_forward(
         elif activation:
             y1 = act(y1)
         y1_full = jax.lax.all_gather(y1, axis, axis=-1, tiled=True)  # l.2
-        y1_mine = jnp.take(y1_full, pp.p2, axis=-1)       # l.3+l.4 fused:
+        y1 = jnp.take(y1_full, pp.p2, axis=-1)            # l.3+l.4 fused:
         # local P2 chunk both permutes and chunks the gathered tensor.
-        y2 = mm(y1_mine, pp.down)                                # l.5 GEMM
     elif pp.scheme == "tp-aware":
         # Paper Algorithm 3: offline fold removed the gather entirely.
         xg = jnp.take(x, pp.p1_up, axis=-1)
@@ -198,13 +216,26 @@ def _pair_local_forward(
             y1 = g * y1
         elif activation:
             y1 = act(y1)
-        y2 = mm(y1, pp.down)                                     # l.2 GEMM
     else:
         raise ValueError(f"unknown scheme {pp.scheme!r}")
 
+    # Down GEMM + trailing collective.  A ':fused' quant spec asks the
+    # Pallas wire-epilogue kernel to emit ring phase 1's payload straight
+    # from the accumulator tiles (DESIGN.md §10) — y_partial never lands
+    # in HBM; otherwise the dense GEMM + plain collective run.
+    spec = policy.collective.resolve(pair_path)
+    if spec.fused:
+        from repro.kernels import dispatch as kdispatch
+
+        tp = jax.lax.psum(1, axis)
+        if kdispatch.supports_wire(pp.down, spec, tp):
+            wp = kdispatch.qmatmul_wire(y1, pp.down, policy, spec=spec,
+                                        tp=tp)
+            return comm.apply_wire(wp, axis, spec, policy)
+        _warn_unfusable(pair_path, pp, tp)
+    y2 = mm(y1, pp.down)                             # l.2 / l.5 down GEMM
     # l.6 / l.3: close the row-TP layer with the planned collective.
-    return comm.apply(y2, axis, policy.collective.resolve(pair_path),
-                      policy)
+    return comm.apply(y2, axis, spec, policy)
 
 
 def pair_forward_tp(

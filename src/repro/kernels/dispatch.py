@@ -20,10 +20,23 @@ Seed entries (see DESIGN.md §1):
   sees real FLOPs/bytes.
 * ``pallas`` — the fused kernels: Algorithm-1 ordered layout
   (``pallas-ordered``) and the naive g_idx gather (``pallas-gidx``).
+* ``pallas-fused`` — the fused WIRE-epilogue kernel (ordered layout
+  only, DESIGN.md §10): its output contract is the quantized-collective
+  wire tuple ``(payload, scales[, zeros])``, not a dense ``y_partial``.
+  It is never selected by ``ExecutionPolicy.backend``; the per-site
+  ``CollectivePlan`` opts in via a ``:fused`` quant spec and
+  ``schemes._pair_local_forward`` calls ``qmatmul_wire``.
+
+The pallas entries degrade gracefully (the ``ExecutionPolicy.auto``
+contract): when a site's K cannot tile the Pallas grid (``pick_block_k``
+would raise), they fall back to the ``jnp`` kernel with a one-line
+warning instead of erroring at forward time.
 """
 
 from __future__ import annotations
 
+import warnings
+from math import gcd
 from typing import Callable, Optional
 
 import jax
@@ -31,13 +44,17 @@ import jax.numpy as jnp
 
 from repro.core import quantization as qz
 from repro.core.policy import ExecutionPolicy
-from repro.core.quantization import QuantizedLinear
+from repro.core.quantization import PACK, QuantizedLinear
 
 KernelFn = Callable[[jax.Array, QuantizedLinear, ExecutionPolicy], jax.Array]
 
 _REGISTRY: dict[tuple[str, str], KernelFn] = {}
 
 KINDS = ("ordered", "naive")
+
+#: backends whose output is a wire tuple, not a dense (..., N) array —
+#: resolvable via the same registry but excluded from ``qmatmul``.
+WIRE_BACKENDS = ("pallas-fused",)
 
 
 def register(kind: str, backend: str):
@@ -72,7 +89,81 @@ def resolve(kind: str, backend: str) -> KernelFn:
 def qmatmul(x: jax.Array, ql: QuantizedLinear,
             policy: ExecutionPolicy) -> jax.Array:
     """``x @ dequantize(ql)`` via the policy-selected kernel."""
+    if policy.backend in WIRE_BACKENDS:
+        raise ValueError(
+            f"backend {policy.backend!r} emits a wire payload, not a dense "
+            f"output; it is selected per site by a ':fused' collective spec "
+            f"(CollectivePlan), not by ExecutionPolicy.backend")
     return resolve(ql.kind, policy.backend)(x, ql, policy)
+
+
+def qmatmul_wire(x: jax.Array, ql: QuantizedLinear, policy: ExecutionPolicy,
+                 *, spec, tp: int):
+    """Fused GEMM + wire quantize -> ``comm.wire.WirePayload`` ready for
+    ``comm.apply_wire`` (ring phase 1 starts from the kernel output).
+    ``spec`` is the resolved quant-int8/int4 ``CollectiveSpec`` with
+    ``fused=True``; caller guarantees ``supports_wire(ql, spec, tp)``."""
+    from repro.comm.wire import WirePayload, wire_params
+
+    payload, scales, zeros = resolve(ql.kind, "pallas-fused")(
+        x, ql, policy, spec=spec, tp=tp)
+    _, _, bs = wire_params(ql.n, tp, spec.bits, spec.block_size)
+    return WirePayload(payload, scales, zeros, n=ql.n, tp=tp,
+                       bits=spec.bits, block=bs,
+                       out_dtype=policy.compute_dtype)
+
+
+def supports_wire(ql: QuantizedLinear, spec, tp: int) -> bool:
+    """True when the fused wire epilogue CAN serve this GEMM site: a
+    quantized full-output collective, a real ring (``tp > 1``), the
+    ordered layout, and a Pallas-tileable K.  The tuner uses this to
+    decide whether to mark a chosen spec ``fused``; the runtime gate in
+    ``schemes._pair_local_forward`` re-checks it (plus ``spec.fused``),
+    so a compiled ``:fused`` plan never dies at forward time."""
+    if getattr(spec, "name", None) not in ("quant-int8", "quant-int4"):
+        return False
+    if tp <= 1:
+        return False
+    if ql.kind != "ordered" or ("ordered", "pallas-fused") not in _REGISTRY:
+        return False
+    return _tileable(ql)[0]
+
+
+# ---------------------------------------------------------------------------
+# graceful Pallas fallback (non-tileable K -> jnp with a one-line warning)
+# ---------------------------------------------------------------------------
+
+def _tileable(ql: QuantizedLinear) -> tuple[bool, str]:
+    """Can the Pallas grid tile this layout's K?  Mirrors the constraints
+    ``dequant_matmul.pick_block_k`` (ordered: K % lcm(group_size, 8)) and
+    the g_idx kernel's power-of-two halving enforce."""
+    if ql.kind == "ordered":
+        base = ql.group_size * PACK // gcd(ql.group_size, PACK)
+        if ql.k % base:
+            return (False, f"K={ql.k} is not a multiple of "
+                           f"lcm(group_size={ql.group_size}, {PACK})={base}")
+    else:
+        bk = min(256, ql.k)
+        while bk > 1 and ql.k % bk:
+            bk //= 2
+        if ql.k % bk or bk % PACK:
+            return (False, f"K={ql.k} has no power-of-two tile that is a "
+                           f"multiple of {PACK}")
+    return True, ""
+
+
+_FALLBACK_WARNED: set = set()
+
+
+def _warn_fallback(ql: QuantizedLinear, reason: str) -> None:
+    key = (ql.kind, ql.k, ql.n, ql.group_size)
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(
+        f"pallas {ql.kind} kernel cannot tile this site ({reason}); "
+        f"falling back to the jnp backend for K={ql.k}, N={ql.n}",
+        stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +189,10 @@ def _jnp_dequant_matmul(x, ql, policy):
 def _pallas_ordered(x, ql, policy):
     from repro.kernels import ops
 
+    ok, reason = _tileable(ql)
+    if not ok:
+        _warn_fallback(ql, reason)
+        return _jnp_dequant_matmul(x, ql, policy)
     t = policy.tiling
     return ops.pallas_dequant_matmul_ordered(
         x, ql, compute_dtype=policy.compute_dtype,
@@ -109,8 +204,27 @@ def _pallas_ordered(x, ql, policy):
 def _pallas_gidx(x, ql, policy):
     from repro.kernels import ops
 
+    ok, reason = _tileable(ql)
+    if not ok:
+        _warn_fallback(ql, reason)
+        return _jnp_dequant_matmul(x, ql, policy)
     t = policy.tiling
     return ops.pallas_dequant_matmul_gidx(
         x, ql, compute_dtype=policy.compute_dtype,
+        block_m=t.block_m, block_n=t.block_n, block_k=t.block_k,
+        interpret=t.interpret)
+
+
+@register("ordered", "pallas-fused")
+def _pallas_fused_wire(x, ql, policy, *, spec, tp):
+    """Wire-contract entry (DESIGN.md §10): returns ``(payload, scales,
+    zeros-or-None)`` over the ring-padded width instead of a dense
+    ``y_partial`` — use via ``qmatmul_wire``, never ``qmatmul``."""
+    from repro.kernels import ops
+
+    t = policy.tiling
+    return ops.dequant_matmul_wire(
+        x, ql, tp=tp, wire_bits=spec.bits, wire_block=spec.block_size,
+        compute_dtype=policy.compute_dtype,
         block_m=t.block_m, block_n=t.block_n, block_k=t.block_k,
         interpret=t.interpret)

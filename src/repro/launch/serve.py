@@ -137,8 +137,10 @@ def prepare(argv=None):
           f"tp={args.tp}) -> {path}: {n_pairs} planned pair(s), "
           f"{len(art.manifest['leaf_shards'])} leaves, {dt:.1f}s")
     for site in art.manifest.get("collective_tuner", ()):
-        print(f"  tuned {site['path']}: {site['chosen']} "
-              f"({site['status']})")
+        # ':fused'-suffixed choices run the wire-epilogue kernel
+        # (DESIGN.md §10); attn_vo sites are the V->O fold epilogues
+        print(f"  tuned {site['path']} [{site.get('kind', 'pair')}]: "
+              f"{site['chosen']} ({site['status']})")
     return path
 
 

@@ -318,8 +318,20 @@ Q_CHUNK = 2048
 Q_CHUNK_MIN_SEQ = 8192
 
 
+def _vo_project_v(vo: PlannedPair, src, policy) -> jax.Array:
+    """V projection through a precompiled V->O fold (``attention_fold``):
+    gather the input by P1, run the folded quantized up GEMM.  The output
+    channels are permuted *within each KV-head block* — attention mixes
+    tokens, never channels, so the mix commutes and ``vo.down`` (whose
+    sorted rows expect exactly this order) closes the pair."""
+    xin = (jnp.take(src, vo.p1_up, axis=-1)
+           if vo.p1_up is not None else src)
+    return schemes.qmatmul(xin, vo.up, policy).astype(src.dtype)
+
+
 def attention_forward(cfg: ModelConfig, p, x, ctx: ParallelContext, *,
-                      positions=None, window=None, kv_x=None, causal=True):
+                      positions=None, window=None, kv_x=None, causal=True,
+                      vo: Optional[PlannedPair] = None):
     """Full-sequence attention (training / prefill / encoder / cross).
 
     ``kv_x``: source sequence for cross-attention (defaults to x).
@@ -327,6 +339,13 @@ def attention_forward(cfg: ModelConfig, p, x, ctx: ParallelContext, *,
     softmax row sees the full key range, so the result is exact (no online
     rescaling needed), while the materialized score tile shrinks from
     (S, T) to (Q_CHUNK, T).
+
+    ``vo``: optional precompiled V->O fold (``core/attention_fold``, the
+    artifact's aux plans).  The V and O projections then run as quantized
+    GEMMs over the folded layout instead of ``p["wv"]``/``p["wo"]`` —
+    channel order inside each KV-head block is permuted, which attention's
+    token-mixing commutes with, so the closed pair is the planned
+    (quantized) function of the same architecture.
     """
     b, s, dm = x.shape
     hd = cfg.head_dim
@@ -336,7 +355,11 @@ def attention_forward(cfg: ModelConfig, p, x, ctx: ParallelContext, *,
 
     q = (x @ p["wq"]).reshape(b, s, h, hd)
     k = (src @ p["wk"]).reshape(b, t, kvh, hd)
-    v = (src @ p["wv"]).reshape(b, t, kvh, hd)
+    if vo is not None:
+        v = _vo_project_v(vo, src, ctx.execution_policy)
+        v = v.reshape(b, t, kvh, hd)
+    else:
+        v = (src @ p["wv"]).reshape(b, t, kvh, hd)
     q = ctx.shard(q, ctx.batch_spec, None, ctx.model_axis, None)
     k = ctx.shard(k, ctx.batch_spec, None, None, None)
     v = ctx.shard(v, ctx.batch_spec, None, None, None)
@@ -385,12 +408,13 @@ def attention_forward(cfg: ModelConfig, p, x, ctx: ParallelContext, *,
     else:
         out = _sdpa(cfg, ctx, q, k, v, mask_rows(0, s))
     out = ctx.shard(out, ctx.batch_spec, None, ctx.model_axis)
-    y = out @ p["wo"]
+    y = _attn_out_proj(p, out, vo, ctx, x.dtype)
     return ctx.shard(y, ctx.batch_spec, None, None)
 
 
 def attention_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ParallelContext,
-                     *, window=None, pages=None):
+                     *, window=None, pages=None,
+                     vo: Optional[PlannedPair] = None):
     """One-token decode with KV cache.
 
     x: (B, 1, d); cache: {"k","v": (B, C, KV, D)} where C = cache capacity
@@ -418,7 +442,14 @@ def attention_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ParallelContext,
 
     q = (x @ p["wq"]).reshape(b, 1, h, hd)
     k = (x @ p["wk"]).reshape(b, 1, kvh, hd)
-    v = (x @ p["wv"]).reshape(b, 1, kvh, hd)
+    if vo is not None:
+        # folded V channels land in the cache; every read goes through
+        # vo.down whose rows expect exactly this order (see
+        # attention_forward) — so the cache layout is self-consistent.
+        v = _vo_project_v(vo, x, ctx.execution_policy)
+        v = v.reshape(b, 1, kvh, hd)
+    else:
+        v = (x @ p["wv"]).reshape(b, 1, kvh, hd)
     if cfg.qk_norm:
         q = rms_head_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_head_norm(k, p["k_norm"], cfg.norm_eps)
@@ -448,7 +479,7 @@ def attention_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ParallelContext,
         q = ctx.shard(q, ctx.batch_spec, None, ctx.model_axis, None)
         out = _sdpa(cfg, ctx, q, kk.astype(x.dtype), vv.astype(x.dtype),
                     mask)
-        y = out @ p["wo"]
+        y = _attn_out_proj(p, out, vo, ctx, x.dtype)
         return ctx.shard(y, ctx.batch_spec, None, None), new_cache
 
     cap = cache["k"].shape[1]
@@ -483,8 +514,15 @@ def attention_decode(cfg: ModelConfig, p, x, cache, pos, ctx: ParallelContext,
 
     q = ctx.shard(q, ctx.batch_spec, None, ctx.model_axis, None)
     out = _sdpa(cfg, ctx, q, ck.astype(x.dtype), cv.astype(x.dtype), mask)
-    y = out @ p["wo"]
+    y = _attn_out_proj(p, out, vo, ctx, x.dtype)
     return ctx.shard(y, ctx.batch_spec, None, None), {"k": ck, "v": cv}
+
+
+def _attn_out_proj(p, out, vo: Optional[PlannedPair], ctx, dtype):
+    if vo is not None:
+        return schemes.qmatmul(out, vo.down,
+                               ctx.execution_policy).astype(dtype)
+    return out @ p["wo"]
 
 
 def init_kv_cache(cfg: ModelConfig, num_layers: int, batch: int, seq_len: int,

@@ -71,7 +71,15 @@ class Model:
     def param_specs(self, params, ctx: ParallelContext):
         return self.module.param_specs(self.cfg, params, ctx)
 
-    def forward(self, params, batch, ctx: ParallelContext, *, window=None):
+    def forward(self, params, batch, ctx: ParallelContext, *, window=None,
+                aux=None):
+        """``aux``: the deployment artifact's aux plans (e.g. precompiled
+        attention V->O folds) — forwarded only to family modules that
+        declare ``SUPPORTS_ATTN_VO``; other families ignore it (their
+        attention has no fold integration yet)."""
+        if aux is not None and self.supports_attn_vo:
+            return self.module.forward(self.cfg, params, batch, ctx,
+                                       window=window, aux=aux)
         return self.module.forward(self.cfg, params, batch, ctx,
                                    window=window)
 
@@ -99,8 +107,18 @@ class Model:
     def cache_specs(self, ctx: ParallelContext):
         return self.module.cache_specs(self.cfg, ctx)
 
+    @property
+    def supports_attn_vo(self) -> bool:
+        """True when the family's attention consumes precompiled V->O
+        folds (``core/attention_fold``) from the artifact's aux tree."""
+        return bool(getattr(self.module, "SUPPORTS_ATTN_VO", False))
+
     def decode_step(self, params, cache, tokens, pos, ctx: ParallelContext,
-                    *, window=None, pages=None):
+                    *, window=None, pages=None, aux=None):
+        if aux is not None and self.supports_attn_vo:
+            return self.module.decode_step(self.cfg, params, cache, tokens,
+                                           pos, ctx, window=window,
+                                           pages=pages, aux=aux)
         return self.module.decode_step(self.cfg, params, cache, tokens, pos,
                                        ctx, window=window, pages=pages)
 

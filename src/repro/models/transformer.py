@@ -50,11 +50,29 @@ def param_specs(cfg: ModelConfig, params, ctx: ParallelContext):
     }
 
 
+#: this family consumes precompiled attention V->O folds (artifact aux
+#: plans) — the registry only forwards ``aux`` to modules that declare it.
+SUPPORTS_ATTN_VO = True
+
+#: dotted path ``stage_fold_attention`` records this family's attention
+#: dicts under (the key into the artifact's aux ``attn_plans``).
+ATTN_VO_PATH = "layers.attn"
+
+
+def _layer_vo(aux):
+    """The stacked V->O ``PlannedPair`` for this family's layers, if the
+    artifact carried one (scanned alongside the layer params)."""
+    if not aux:
+        return None
+    return (aux.get("attn_plans") or {}).get(ATTN_VO_PATH)
+
+
 def _layer(cfg, ctx, window, mlp_path="layers.mlp"):
     def body(x, lp, _):
         h = cm.attention_forward(cfg, lp["attn"],
                                  cm.apply_norm(cfg, lp["ln1"], x), ctx,
-                                 window=window, causal=cfg.causal)
+                                 window=window, causal=cfg.causal,
+                                 vo=lp.get("attn_vo"))
         x = x + h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
                            ctx, path=mlp_path)
@@ -63,10 +81,14 @@ def _layer(cfg, ctx, window, mlp_path="layers.mlp"):
 
 
 def forward(cfg: ModelConfig, params, batch, ctx: ParallelContext, *,
-            window=None):
+            window=None, aux=None):
     """Train/prefill forward: batch={"tokens": (B, S)} -> logits."""
     x = cm.embed_tokens(cfg, params["embed"], batch["tokens"], ctx)
-    x = cm.scan_layers(_layer(cfg, ctx, window), x, params["layers"], ctx)
+    layers = params["layers"]
+    vo = _layer_vo(aux)
+    if vo is not None:
+        layers = dict(layers, attn_vo=vo)
+    x = cm.scan_layers(_layer(cfg, ctx, window), x, layers, ctx)
     x = cm.apply_norm(cfg, params["final_norm"], x)
     return cm.lm_head(cfg, params["embed"], x, ctx)
 
@@ -89,20 +111,25 @@ def cache_specs(cfg: ModelConfig, ctx: ParallelContext):
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
-                ctx: ParallelContext, *, window=None, pages=None):
+                ctx: ParallelContext, *, window=None, pages=None, aux=None):
     """One-token decode. tokens: (B,), pos: scalar -> (logits (B, V), cache)."""
     x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
 
     def body(x, lp, lc, _):
         h, nc = cm.attention_decode(cfg, lp["attn"],
                                     cm.apply_norm(cfg, lp["ln1"], x),
-                                    lc, pos, ctx, window=window, pages=pages)
+                                    lc, pos, ctx, window=window, pages=pages,
+                                    vo=lp.get("attn_vo"))
         x = x + h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
                            ctx, path="layers.mlp")
         return x + h, nc
 
-    x, new_cache = cm.scan_layers_cache(body, x, params["layers"], cache, ctx)
+    layers = params["layers"]
+    vo = _layer_vo(aux)
+    if vo is not None:
+        layers = dict(layers, attn_vo=vo)
+    x, new_cache = cm.scan_layers_cache(body, x, layers, cache, ctx)
     x = cm.apply_norm(cfg, params["final_norm"], x)
     logits = cm.lm_head(cfg, params["embed"], x, ctx)
     return logits[:, 0], new_cache

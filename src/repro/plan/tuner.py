@@ -29,8 +29,22 @@ so a served deployment can show why each layer got its collective.
 
 Sites the tuner cannot shard for the target TP degree (non-divisible N1,
 group-misaligned shards) keep the default — recorded as ``untunable`` in
-the report, never silently dropped.  Aux attention V->O folds are not
-tuned (the attention runtime does not consume them yet; see ROADMAP).
+the report, never silently dropped.
+
+Two site-level refinements (DESIGN.md §10):
+
+* When the winning spec is a quantized collective AND the site's down
+  GEMM can run the fused wire-epilogue kernel
+  (``kernels.dispatch.supports_wire``: ordered layout, tp > 1, tileable
+  K), the compiled entry is marked ``:fused`` — the Pallas kernel emits
+  ring phase 1's payload straight from the accumulator tiles.  The wire
+  bytes and numerics are bit-identical to the unfused spec, so the
+  score carries over; the report records ``fused: true``.
+* Aux attention V->O folds (``cfg.quant.attn_tp_aware``) are probed as
+  sites too (``kind: "attn_vo"`` in the report) now that the attention
+  runtime consumes them; their entries join the plan under the fold's
+  dotted path.  They are never marked fused — the attention forward
+  closes its epilogue through GSPMD, not the explicit-collective path.
 """
 
 from __future__ import annotations
@@ -122,9 +136,19 @@ def _site_pair(params, path: str, stacked):
     return node
 
 
+def _site_attn_pair(plans):
+    """The layer-0 V->O ``PlannedPair`` of a (possibly stacked) aux fold."""
+    lead = plans.up.qweight.ndim - 2
+    if lead:
+        return jax.tree.map(lambda a: a[(0,) * lead], plans)
+    return plans
+
+
 def _probe_site(pp, tp: int, rng, calib_batch: int, candidates,
                 activation: Optional[str]):
     """Score every candidate on one pair site; returns {shorthand: dict}."""
+    from repro.kernels import dispatch as kdispatch
+
     shards = reorder.shard_pair(pp, tp)
     x = jax.random.normal(rng, (calib_batch, pp.k1), jnp.float32)
     partials = [
@@ -142,6 +166,9 @@ def _probe_site(pp, tp: int, rng, calib_batch: int, candidates,
             "rel_err": err,
             # per-token wire bytes (batch-independent ranking)
             "bytes_per_token": spec.bytes_on_wire((1, pp.n2), tp),
+            # can the fused wire-epilogue kernel serve this site's down
+            # GEMM? (per-rank shard geometry, so probe the shard)
+            "fusable": kdispatch.supports_wire(shards[0].down, spec, tp),
         }
     return scores
 
@@ -169,18 +196,29 @@ def autotune_collectives(state, mesh=None, *,
     if candidates is None:
         candidates = candidate_specs()
 
+    # probe sites: every planned MLP pair, then (when the attention-fold
+    # stage ran) every aux V->O fold — the attention runtime consumes
+    # those pairs now, so their epilogues are collective sites too.
+    sites = [(meta["path"], "pair",
+              lambda meta=meta: _site_pair(state.params, meta["path"],
+                                           meta["stacked"]),
+              state.cfg.activation)
+             for meta in state.pair_meta]
+    sites += [(path, "attn_vo",
+               lambda plans=plans: _site_attn_pair(plans),
+               None)   # no activation between the V and O GEMMs
+              for path, plans in sorted((state.attn_plans or {}).items())]
+
     entries, report = [], []
-    for i, meta in enumerate(state.pair_meta):
-        path = meta["path"]
+    for i, (path, kind, get_pair, activation) in enumerate(sites):
         rng = jax.random.fold_in(
             jax.random.fold_in(state.rng, TUNE_RNG_STREAM), i)
         if tp == 1:
             chosen, scores, status = default, {}, "tp=1 (no collective)"
         else:
-            pp = _site_pair(state.params, path, meta["stacked"])
             try:
-                scores = _probe_site(pp, tp, rng, calib_batch,
-                                     candidates, state.cfg.activation)
+                scores = _probe_site(get_pair(), tp, rng, calib_batch,
+                                     candidates, activation)
                 status = "tuned"
             except ValueError as e:   # non-divisible / group-misaligned
                 scores, status = {}, f"untunable: {e}"
@@ -188,10 +226,19 @@ def autotune_collectives(state, mesh=None, *,
             # nothing scored / nothing within budget -> the safe default
             chosen = (min(ok, key=lambda v: v["bytes_per_token"])["spec"]
                       if ok else default)
+            if kind == "pair":
+                # fuse the wire epilogue into the down GEMM where the
+                # Pallas kernel can serve it: same wire bytes + numerics
+                # (bit-identical payload), one less HBM round trip.
+                win = scores.get(chosen.shorthand())
+                if win is not None and win.get("fusable"):
+                    chosen = chosen.with_(fused=True)
+                    scores[chosen.shorthand()] = {**win, "spec": chosen}
         entries.append((path, chosen))
         report.append({
-            "path": path, "tp": tp, "budget": budget, "status": status,
-            "chosen": chosen.shorthand(),
+            "path": path, "kind": kind, "tp": tp, "budget": budget,
+            "status": status, "chosen": chosen.shorthand(),
+            "fused": chosen.fused,
             "candidates": {
                 short: {"rel_err": v["rel_err"],
                         "bytes_per_token": v["bytes_per_token"]}

@@ -37,6 +37,9 @@ class Engine:
     # derives it from the model config; the resolved policy is injected
     # into ``ctx`` so model code sees one source of truth.
     policy: Optional[ExecutionPolicy] = None
+    # The artifact's aux plans (precompiled attention V->O folds) — closed
+    # over by the jitted step functions for families that consume them.
+    aux: Optional[Any] = None
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -52,13 +55,15 @@ class Engine:
                 "Engine got conflicting deployment plans: "
                 f"policy={self.policy} but ctx.policy={self.ctx.policy}; "
                 "pass one (the ctx policy is what model code executes)")
+        aux = self.aux
 
         def prefill_logits(params, batch):
-            return mod.forward(params, batch, self.ctx, window=self.window)
+            return mod.forward(params, batch, self.ctx, window=self.window,
+                               aux=aux)
 
         def decode(params, cache, tokens, pos, pages=None):
             return mod.decode_step(params, cache, tokens, pos, self.ctx,
-                                   window=self.window, pages=pages)
+                                   window=self.window, pages=pages, aux=aux)
 
         def reset_slot(cache, slot):
             # zero one slot's lane across every per-slot state leaf
@@ -201,6 +206,7 @@ def make_engine(cfg, rng=None, *, ctx: ParallelContext = REPLICATED,
     artifact, ``Model.init`` runs the identical compiler in memory.
     """
     model = build_model(cfg)
+    aux = None
     if artifact is not None:
         from repro.plan import DeploymentArtifact
 
@@ -213,7 +219,8 @@ def make_engine(cfg, rng=None, *, ctx: ParallelContext = REPLICATED,
         tp = ctx.axis_size(ctx.model_axis) if ctx.mesh is not None else 1
         artifact.validate(cfg=cfg, policy=eff_policy, tp=tp)
         params = artifact.params()
+        aux = artifact.aux   # precompiled V->O folds (None when absent)
     else:
         params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
     return Engine(model=model, params=params, ctx=ctx, max_seq=max_seq,
-                  window=window, policy=policy)
+                  window=window, policy=policy, aux=aux)

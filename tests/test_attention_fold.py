@@ -80,3 +80,84 @@ def test_group_size_must_tile_head_dim():
         af.plan_attention_vo(jnp.zeros((64, 64)), jnp.zeros((128, 64)),
                              n_heads=4, n_kv_heads=2, head_dim=32,
                              group_size=48)
+
+
+# ---------------------------------------------------------------------------
+# runtime consumption: the model attention executes the fold (aux plans)
+# ---------------------------------------------------------------------------
+
+def _effective_dense_weights(vo):
+    """The fold's closed function as plain dense weights:
+    ``v = take(x, p1) @ W_up  ==  x @ scatter_rows(W_up, p1)`` and
+    ``y = out @ W_down`` (tp-aware: the P2 fold happened offline)."""
+    wv = qz.dequantize(vo.up)
+    if vo.p1_up is not None:
+        wv = jnp.zeros_like(wv).at[vo.p1_up].set(wv)
+    return wv, qz.dequantize(vo.down)
+
+
+def test_attention_runtime_consumes_vo_fold():
+    """attention_forward/attention_decode with ``vo=`` run the precompiled
+    fold: equal (to f32 GEMM tolerance) to the dense path with the fold's
+    effective dequantized weights — the commutation argument end to end,
+    inside the real model attention (RoPE, GQA, qk-norm, cache)."""
+    from repro.configs import get_smoke_config
+    from repro.models import common as cm
+    from repro.models.common import REPLICATED
+
+    cfg = get_smoke_config("qwen3-4b")
+    p = cm.attention_params(cfg, jax.random.PRNGKey(0))
+    hd = cfg.head_dim
+    kvp, _, hp = cm.head_grid(cfg)
+    gs = qz.choose_group_size(hd, cfg.quant.group_size)
+    vo = af.plan_attention_vo(p["wv"], p["wo"], n_heads=hp, n_kv_heads=kvp,
+                              head_dim=hd, group_size=gs,
+                              rng=jax.random.PRNGKey(7))
+    wv_eff, wo_eff = _effective_dense_weights(vo)
+    p_eff = dict(p, wv=wv_eff, wo=wo_eff)
+
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 6, cfg.d_model))
+    y_vo = cm.attention_forward(cfg, p, x, REPLICATED, vo=vo)
+    y_eff = cm.attention_forward(cfg, p_eff, x, REPLICATED)
+    scale = float(jnp.abs(y_eff).max())
+    np.testing.assert_allclose(np.asarray(y_vo), np.asarray(y_eff),
+                               atol=1e-4 * max(scale, 1.0))
+
+    cache = {"k": jnp.zeros((2, 8, kvp, hd)), "v": jnp.zeros((2, 8, kvp, hd))}
+    y1, c1 = cm.attention_decode(cfg, p, x[:, :1], dict(cache),
+                                 jnp.int32(0), REPLICATED, vo=vo)
+    y2, c2 = cm.attention_decode(cfg, p_eff, x[:, :1], dict(cache),
+                                 jnp.int32(0), REPLICATED)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4 * max(scale, 1.0))
+    # folded V channels land in the cache — permuted within head blocks
+    # relative to the dense cache, identical as a (sorted) multiset
+    np.testing.assert_allclose(
+        np.sort(np.asarray(c1["v"][:, 0]), axis=-1),
+        np.sort(np.asarray(c2["v"][:, 0]), axis=-1), atol=1e-4)
+
+
+def test_engine_serves_artifact_aux_folds():
+    """An artifact prepared with ``attn_tp_aware`` serves through the
+    fold: the engine closes over the aux plans, prefill/decode run, and
+    the logits differ from the no-aux engine (quantized V/O path)."""
+    from repro.configs import get_smoke_config
+    from repro.plan import compiler
+    from repro.runtime.serve import Engine, make_engine
+
+    cfg = get_smoke_config("qwen3-4b").with_quant(attn_tp_aware=True)
+    art = compiler.prepare(cfg, tp=1, seed=0)
+    assert art.aux and "attn_plans" in art.aux
+
+    eng = make_engine(cfg, artifact=art, max_seq=32)
+    assert eng.aux is not None
+    tokens = jnp.array([[1, 2, 3, 4]])
+    logits_fold = eng._prefill(eng.params, {"tokens": tokens})
+
+    plain = Engine(model=eng.model, params=eng.params, max_seq=32)
+    logits_plain = plain._prefill(plain.params, {"tokens": tokens})
+    assert float(jnp.max(jnp.abs(logits_fold - logits_plain))) > 0
+
+    cache = eng.init_cache(1)
+    lg, _ = eng._decode(eng.params, cache, jnp.array([3]), jnp.int32(0))
+    assert lg.shape == (1, cfg.vocab_size)
