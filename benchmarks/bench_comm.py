@@ -23,7 +23,14 @@ exactly from lowered HLO rather than wall time) — three tables:
    the unfused strategy — the fusion saves HBM traffic inside the
    kernel, never wire bytes — both asserted per row.
 
-4. **per pair path under a ``CollectivePlan``**: the per-layer selection
+4. **exposed vs overlapped quant ring**: the ``:overlap`` spec
+   (DESIGN.md §11) pipelines the decomposed ppermute ring against the
+   next microbatch's dequant-GEMM; outputs and wire bytes must be
+   identical to the synchronous epilogue while
+   ``roofline.parse_overlap_windows`` proves the compiled schedule
+   issues the permutes with a GEMM inside their in-flight windows.
+
+5. **per pair path under a ``CollectivePlan``**: the per-layer selection
    table — each pair resolves its own collective from the plan's glob
    map, shown with the lowered HLO's collective instruction counts
    (quant epilogues lower to all_to_all + all_gather phases, psum/cast
@@ -189,6 +196,68 @@ def _fused_wire_table(out_lines: list, m: int):
                 out_lines.append(line)
 
 
+def _overlap_table(out_lines: list, m: int):
+    """Exposed vs overlapped quantized ring (DESIGN.md §11).
+
+    Per quant strategy × TP degree: the ``:overlap`` spec decomposes the
+    two-phase ring into explicit ppermute rotations microbatch-pipelined
+    against the down GEMM.  Three properties asserted per row, not just
+    tabulated: the output is bit-identical to the synchronous epilogue,
+    the measured HLO wire bytes are identical (only the *exposure*
+    changes), and ``roofline.parse_overlap_windows`` finds ppermute
+    windows spanning a GEMM in the overlapped schedule (and none in the
+    synchronous one).  Wall time is reported for trend tracking but the
+    hiding is only real on backends with async collectives — CPU runs
+    the schedule serially, so ``wall_ms`` parity is expected here."""
+    import time as _time
+
+    title = "# bench_comm: exposed vs overlapped quant ring (M=8)"
+    print(title)
+    out_lines.append(title)
+    header = ("k1_n1_n2,TP,spec,epi,hlo_B,spanning,wall_ms,max_abs_diff")
+    print(header)
+    out_lines.append(header)
+    k1, n1, n2 = 256, 512, 256
+    pp = _plan(k1, n1, n2, "tp-aware", gs=32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k1))
+    for tp in (2, 4, 8):
+        if tp > len(jax.devices()):
+            continue
+        mesh = _mesh(tp)
+        for base in ("quant-int8:32", "quant-int4:32"):
+            ys, bytes_, spans, wall = {}, {}, {}, {}
+            for epi in ("sync", "overlap"):
+                short = base + (":overlap" if epi == "overlap" else "")
+                pol = ExecutionPolicy(scheme="tp-aware", backend="jnp",
+                                      compute_dtype=jnp.float32,
+                                      collective=CollectiveSpec.parse(short))
+                with mesh:
+                    fn = lambda xx, p, pol=pol: p.forward(
+                        xx, pol, mesh, activation=None)
+                    bytes_[epi] = _collective_bytes(
+                        fn, (x, pp), mesh)["total_per_device"]
+                    jfn = jax.jit(fn)
+                    spans[epi] = roofline.parse_overlap_windows(
+                        jfn.lower(x, pp).compile().as_text())["spanning"]
+                    ys[epi] = np.asarray(jfn(x, pp))
+                    jfn(x, pp).block_until_ready()    # warm
+                    t0 = _time.perf_counter()
+                    for _ in range(5):
+                        jfn(x, pp).block_until_ready()
+                    wall[epi] = (_time.perf_counter() - t0) / 5 * 1e3
+            diff = float(np.abs(ys["overlap"] - ys["sync"]).max())
+            assert diff == 0.0, f"overlap diverged ({base}, tp={tp})"
+            assert bytes_["overlap"] == bytes_["sync"], (base, tp, bytes_)
+            assert spans["overlap"] >= 1, (base, tp, spans)
+            assert spans["sync"] == 0, (base, tp, spans)
+            for epi in ("sync", "overlap"):
+                line = (f"{k1}_{n1}_{n2},{tp},{base},{epi},"
+                        f"{bytes_[epi]:.0f},{spans[epi]},"
+                        f"{wall[epi]:.2f},{diff:.1e}")
+                print(line)
+                out_lines.append(line)
+
+
 #: the demo per-layer plan the third table resolves pairs against —
 #: mirrors what `prepare --autotune-collectives` compiles into artifacts
 PER_LAYER_PLAN = ("per-layer:*.mlp=quant-int8:128,"
@@ -240,6 +309,7 @@ def run(out_lines: list):
     _scheme_table(out_lines, m)
     _strategy_table(out_lines, m)
     _fused_wire_table(out_lines, m)
+    _overlap_table(out_lines, m)
     _per_layer_table(out_lines, m)
 
 

@@ -111,7 +111,13 @@ def resolve(name: str) -> CollectiveStrategy:
 
 
 def apply(y: jax.Array, axis: str, spec: CollectiveSpec, policy=None):
-    """Close a row-TP layer: run ``spec`` on one rank's partial sums."""
+    """Close a row-TP layer: run ``spec`` on one rank's partial sums.
+    ``:overlap`` quant specs route to the decomposed ``ppermute`` ring
+    (``dist/overlap.py``) — bit-identical, same wire bytes, but issued
+    as rotations the scheduler can hide behind compute."""
+    if spec.overlap:
+        from repro.dist import overlap as _overlap  # deferred: dist imports us
+        return _overlap.apply_overlapped(y, axis, spec, policy)
     return resolve(spec.name).apply(y, axis, spec, policy)
 
 
@@ -119,6 +125,9 @@ def apply_wire(wp, axis: str, spec: CollectiveSpec, policy=None):
     """Close a row-TP layer from a kernel-emitted ``WirePayload``: the
     fused Pallas epilogue already ran ring phase 1's quantize, so the
     collective starts directly at the payload exchange (DESIGN.md §10)."""
+    if spec.overlap:
+        from repro.dist import overlap as _overlap
+        return _overlap.apply_wire_overlapped(wp, axis, spec, policy)
     return resolve(spec.name).apply_wire(wp, axis, spec, policy)
 
 

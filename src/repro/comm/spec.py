@@ -25,6 +25,12 @@ and CLIs:
   from the Pallas dequant-GEMM accumulator tiles instead of a separate
   quantize pass over ``y_partial`` (DESIGN.md §10); bit-identical on the
   wire, so ``bytes_on_wire`` is unchanged.
+* ... and a trailing ``:overlap`` flag (``"quant-int8:128:fused:overlap"``;
+  flag order is accepted either way, the shorthand prints ``:fused``
+  first) — the two-phase ring is decomposed into explicit ``ppermute``
+  rotations and microbatch-pipelined against the down GEMM
+  (``dist/overlap.py``, DESIGN.md §11); bit-identical output and
+  identical wire bytes, only the *exposure* of the collective changes.
 
 ``CollectivePlan`` lifts the spec to a *per-layer* decision (tolerance
 to wire compression varies sharply by layer — Hansen-Palmus et al.
@@ -95,6 +101,7 @@ class CollectiveSpec:
     block_size: int = 128
     bits: Optional[int] = None   # None -> the strategy's payload width
     fused: bool = False          # wire payload produced by the GEMM kernel
+    overlap: bool = False        # decomposed ring pipelined with the GEMM
 
     def __post_init__(self):
         from repro.comm import dispatch  # deferred: dispatch imports spec
@@ -125,6 +132,10 @@ class CollectiveSpec:
             raise ValueError(
                 f"fused wire epilogue only applies to quant-int8/quant-int4 "
                 f"collectives, not {self.name!r}")
+        if self.overlap and self.name not in ("quant-int8", "quant-int4"):
+            raise ValueError(
+                f"overlapped epilogue only applies to quant-int8/quant-int4 "
+                f"collectives, not {self.name!r}")
 
     # ---- construction -----------------------------------------------------
 
@@ -143,20 +154,27 @@ class CollectiveSpec:
         if name == "cast":
             return cls(name="cast", wire_dtype=arg or "bfloat16")
         if name in ("quant-int8", "quant-int4"):
-            # quant shorthands: "<name>[:<block>][:fused]" — the trailing
-            # "fused" flag means the GEMM kernel emits the wire payload.
+            # quant shorthands: "<name>[:<block>][:fused][:overlap]" —
+            # "fused" means the GEMM kernel emits the wire payload,
+            # "overlap" the decomposed pipelined ring; trailing flags are
+            # accepted in either order, each at most once.
             parts = [p for p in arg.split(":") if p] if arg else []
-            fused = False
-            if parts and parts[-1] == "fused":
-                fused, parts = True, parts[:-1]
+            flags = set()
+            while parts and parts[-1] in ("fused", "overlap"):
+                if parts[-1] in flags:
+                    raise ValueError(
+                        f"collective shorthand {value!r} repeats the "
+                        f"':{parts[-1]}' flag")
+                flags.add(parts.pop())
             if len(parts) > 1:
                 raise ValueError(
                     f"collective shorthand {value!r} has too many ':' "
-                    f"arguments (expected '<name>[:<block>][:fused]')")
+                    f"arguments (expected "
+                    f"'<name>[:<block>][:fused][:overlap]')")
             default_block = 128 if name == "quant-int8" else 32
             return cls(name=name, bits=4 if name == "quant-int4" else None,
                        block_size=int(parts[0]) if parts else default_block,
-                       fused=fused)
+                       fused="fused" in flags, overlap="overlap" in flags)
         if arg:
             raise ValueError(
                 f"collective {name!r} takes no ':' argument (got {value!r})")
@@ -167,7 +185,8 @@ class CollectiveSpec:
         if self.name == "cast":
             return f"cast:{jnp.dtype(self.wire_dtype).name}"
         if self.name in ("quant-int8", "quant-int4"):
-            suffix = ":fused" if self.fused else ""
+            suffix = (":fused" if self.fused else "") + (
+                ":overlap" if self.overlap else "")
             return f"{self.name}:{self.block_size}{suffix}"
         return self.name
 

@@ -100,10 +100,17 @@ class ExecutionPolicy:
     # or a shared page pool ("paged:16", "paged:16:int8", ...).  String
     # shorthands parse in __post_init__, mirroring ``collective``.
     kv: Any = None
+    # Device-grid plan ("repro.dist.MeshPlan"): the DP×TP(×EP) grid the
+    # deployment spans, as a frozen record or a "dp2xtp4" shorthand.
+    # Recorded in the artifact manifest for provenance (serving on a
+    # different grid with the same TP degree is allowed — validate only
+    # pins the model-axis degree).
+    mesh: Any = None
 
     def __post_init__(self):
         from repro.cache.spec import PageSpec
         from repro.core.reorder import SCHEMES
+        from repro.dist.topology import MeshPlan
         if self.scheme not in SCHEMES:
             raise ValueError(
                 f"unknown scheme {self.scheme!r}, expected one of {SCHEMES}")
@@ -114,6 +121,7 @@ class ExecutionPolicy:
         object.__setattr__(self, "accum_dtype",
                            _canon_dtype(self.accum_dtype))
         object.__setattr__(self, "kv", PageSpec.parse(self.kv))
+        object.__setattr__(self, "mesh", MeshPlan.parse(self.mesh))
 
     # ---- builders ---------------------------------------------------------
 

@@ -1,0 +1,353 @@
+"""Overlapped quantized TP epilogues: the decomposed, pipelined ring.
+
+The synchronous quantized collectives (``comm/dispatch.py``) close a
+row-TP layer with one ``all_to_all`` + one ``all_gather`` issued *after*
+the down GEMM — the exposed-collective pattern Xu et al. 2025
+(PAPERS.md) show dominates decode latency.  This module re-expresses the
+SAME two-phase ring as explicit single-step ``ppermute`` rotations and
+pipelines the epilogue over row microbatches, so each microbatch's ring
+is in flight while the next microbatch's dequant-GEMM computes:
+
+    gemm(mb0) -> ring_start(mb0) -> gemm(mb1) -> ring_finish(mb0)
+                                 -> ring_start(mb1) -> ring_finish(mb1)
+
+Two mechanisms make the overlap real rather than hoped-for:
+
+* ``ring_start`` returns the raw ``ppermute`` results WITHOUT scattering
+  them into the collect buffer — assembly happens in ``ring_finish``, so
+  the first consumer of every rotation sits on the far side of the next
+  microbatch's GEMM in the data-flow graph.
+* ``pipelined_epilogue`` threads ``jax.lax.optimization_barrier`` ties:
+  the pending ring's results gate on the next GEMM's output (always), so
+  no scheduler can close the ring before the GEMM it should hide behind;
+  and on backends whose collectives are synchronous instructions (CPU
+  XLA never emits ``collective-permute-start``) the next GEMM's *input*
+  additionally gates on the rotations, pinning issue order so the
+  scheduled module provably exhibits the window.  On async backends that
+  second tie is skipped — the ``-start`` may hoist as early as the
+  scheduler likes and only the ``-done`` is held past the GEMM.
+
+``launch/roofline.parse_overlap_windows`` verifies either encoding from
+the compiled HLO: the window of a collective (or its ``-start``) is the
+scheduled span up to its first consumer (the ``-done`` for async pairs),
+and overlap means a dequant-GEMM lands inside it.
+
+Bit-identity (asserted in tests at tp ∈ {2, 4, 8}, int8 and int4, plain
+and ``:fused``):
+
+* Row-slicing the down GEMM is exact — each output row is an independent
+  dot product, and the wire quantization blocks run along the LAST dim,
+  so microbatching changes no arithmetic.
+* The deferred-assembly collect reproduces ``all_to_all(split_axis=0,
+  concat_axis=0, tiled=True)`` element-for-element: slot ``j`` of the
+  assembled buffer holds rank ``j``'s chunk, the exact layout the
+  synchronous exchange dequant-accumulates (same summation order, same
+  f32 adds).
+* ``_rotate_gather`` + ``_merge_last`` reproduce ``all_gather(axis=-1,
+  tiled=True)``; quantization blocks never straddle chunk boundaries
+  (``bs | chunk`` by construction), so the local dequantize sees
+  identical blocks.
+
+What this module does NOT do: defer the ring past the next *layer*'s
+GEMM.  The transformer's residual + norm consume the closed epilogue
+before the next layer's inputs exist, so cross-layer deferral cannot be
+bit-identical; the pipelining here overlaps the ring with the same
+site's remaining GEMM work instead (DESIGN.md §11 discusses the
+trade-off honestly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.dispatch import (_blockwise_dequantize,
+                                 _blockwise_dequantize_int4,
+                                 _blockwise_quantize,
+                                 _blockwise_quantize_int4, _pack4_last,
+                                 _unpack4_last)
+from repro.core.quantization import PACK, choose_group_size
+
+__all__ = ["PendingEpilogue", "ring_start", "ring_start_wire",
+           "ring_finish", "apply_overlapped", "apply_wire_overlapped",
+           "pipelined_epilogue"]
+
+
+# ---------------------------------------------------------------------------
+# decomposed ring primitives
+# ---------------------------------------------------------------------------
+
+def _rotate_collect(parts, axis: str, tp: int):
+    """Issue phase 1: ``all_to_all(split_axis=0, concat_axis=0,
+    tiled=True)`` decomposed into ``tp - 1`` single-step ``ppermute``
+    rotations per payload part.
+
+    Each array in ``parts`` is this rank's chunked payload ``(tp, ...)``
+    — slot ``d`` the chunk destined for rank ``d``.  At rotation step
+    ``s`` every rank sends its chunk for rank ``(r + s) % tp`` and
+    receives from rank ``(r - s) % tp``; the own chunk never touches the
+    wire.  Returns, per part, ``(own_chunk, received_pieces)`` WITHOUT
+    scattering into the collect buffer — ``_assemble_collect`` does that
+    in ``ring_finish``, so the rotations' first consumers land after
+    whatever the pipeline schedules in between (the overlap window).
+    """
+    r = jax.lax.axis_index(axis)
+    collected = []
+    for p in parts:
+        own = jnp.take(p, r, axis=0)
+        recvs = []
+        for s in range(1, tp):
+            perm = [(src, (src + s) % tp) for src in range(tp)]
+            send = jnp.take(p, (r + s) % tp, axis=0)
+            recvs.append(jax.lax.ppermute(send, axis, perm))
+        collected.append((own, tuple(recvs)))
+    return tuple(collected)
+
+
+def _assemble_collect(collected, axis: str, tp: int):
+    """Scatter the phase-1 pieces by SOURCE rank: slot ``j`` of each
+    returned ``(tp, ...)`` buffer holds the chunk rank ``j`` sent here —
+    the exact ``all_to_all`` layout the synchronous exchange reduces."""
+    r = jax.lax.axis_index(axis)
+    outs = []
+    for own, recvs in collected:
+        buf = jnp.zeros((tp,) + own.shape, own.dtype).at[r].set(own)
+        for s, recv in enumerate(recvs, start=1):
+            buf = buf.at[(r - s) % tp].set(recv)
+        outs.append(buf)
+    return tuple(outs)
+
+
+def _rotate_gather(parts, axis: str, tp: int):
+    """``all_gather`` into a new leading source axis, decomposed into
+    ``tp - 1`` rotations: slot ``j`` of each returned ``(tp, ...)`` array
+    holds rank ``j``'s copy of that array."""
+    r = jax.lax.axis_index(axis)
+    outs = []
+    for p in parts:
+        buf = jnp.zeros((tp,) + p.shape, p.dtype).at[r].set(p)
+        for s in range(1, tp):
+            perm = [(src, (src + s) % tp) for src in range(tp)]
+            recv = jax.lax.ppermute(p, axis, perm)
+            buf = buf.at[(r - s) % tp].set(recv)
+        outs.append(buf)
+    return tuple(outs)
+
+
+def _merge_last(stacked: jax.Array) -> jax.Array:
+    """Source-stacked ``(tp, ..., c)`` -> ``(..., tp * c)``: the layout
+    ``all_gather(axis=-1, tiled=True)`` produces."""
+    out = jnp.moveaxis(stacked, 0, -2)
+    return out.reshape(*out.shape[:-2], out.shape[-2] * out.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# start / finish halves of the epilogue
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PendingEpilogue:
+    """An in-flight ring: phase 1 has been issued, phase 2 has not.
+
+    A pytree (so it threads through ``optimization_barrier``): holding
+    one of these across other compute IS the overlap — the phase-1
+    ``ppermute`` results are first consumed by ``ring_finish``, so
+    everything scheduled in between sits inside the collectives' async
+    windows.
+    """
+
+    parts: tuple          # ((own, (recv_1, ...)), ...) per payload part
+    axis: str
+    tp: int
+    bits: int
+    bs: int
+    n: int                # logical output dim (pre-padding)
+    n_pad: int
+    out_dtype: Any
+
+    def tree_flatten(self):
+        return ((self.parts,),
+                (self.axis, self.tp, self.bits, self.bs, self.n,
+                 self.n_pad, self.out_dtype))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        axis, tp, bits, bs, n, n_pad, out_dtype = aux
+        return cls(parts=children[0], axis=axis, tp=tp, bits=bits, bs=bs,
+                   n=n, n_pad=n_pad, out_dtype=out_dtype)
+
+
+def ring_start(y: jax.Array, axis: str, spec, tp: int) -> PendingEpilogue:
+    """Quantize this rank's partial and issue ring phase 1 — the
+    decomposed equivalent of the synchronous strategies' pad/chunk/
+    quantize + ``all_to_all`` (numerics copied line-for-line from
+    ``comm.dispatch._QuantInt8.apply`` / ``_QuantInt4.apply``)."""
+    n = y.shape[-1]
+    out_dtype = y.dtype
+    y32 = y.astype(jnp.float32)
+    pad = (-n) % (tp if spec.bits == 8 else tp * PACK)
+    if pad:
+        y32 = jnp.pad(y32, [(0, 0)] * (y32.ndim - 1) + [(0, pad)])
+    chunk = (n + pad) // tp
+    bs = choose_group_size(chunk, spec.block_size)
+    yc = jnp.moveaxis(y32.reshape(*y32.shape[:-1], tp, chunk), -2, 0)
+    if spec.bits == 8:
+        q, s = _blockwise_quantize(yc, bs)
+        parts = _rotate_collect((q, s), axis, tp)
+    else:
+        q, s, z = _blockwise_quantize_int4(yc, bs)
+        parts = _rotate_collect((_pack4_last(q), s, z), axis, tp)
+    return PendingEpilogue(parts=parts, axis=axis, tp=tp, bits=spec.bits,
+                           bs=bs, n=n, n_pad=n + pad, out_dtype=out_dtype)
+
+
+def ring_start_wire(wp, axis: str, spec, tp: int) -> PendingEpilogue:
+    """Issue ring phase 1 directly from a kernel-emitted ``WirePayload``
+    (the fused Pallas epilogue already quantized — DESIGN.md §10); the
+    reshapes are the same as ``apply_wire``'s."""
+    if tp == 1 or tp != wp.tp or wp.bits != spec.bits:
+        raise ValueError(
+            f"wire payload (tp={wp.tp}, bits={wp.bits}) does not fit a "
+            f"{tp}-rank {spec.name} overlapped ring")
+    lead = wp.payload.shape[:-1]
+    bs = wp.block
+    if wp.bits == 8:
+        n_pad = wp.payload.shape[-1]
+        chunk = n_pad // tp
+        q = jnp.moveaxis(wp.payload.reshape(*lead, tp, chunk), -2, 0)
+        s = jnp.moveaxis(wp.scales.reshape(*lead, tp, chunk // bs), -2, 0)
+        parts = _rotate_collect((q, s), axis, tp)
+    else:
+        n_pad = wp.payload.shape[-1] * PACK
+        words = n_pad // (tp * PACK)
+        qp = jnp.moveaxis(wp.payload.reshape(*lead, tp, words), -2, 0)
+        s = jnp.moveaxis(
+            wp.scales.reshape(*lead, tp, n_pad // (tp * bs)), -2, 0)
+        z = jnp.moveaxis(
+            wp.zeros.reshape(*lead, tp, n_pad // (tp * bs)), -2, 0)
+        parts = _rotate_collect((qp, s, z), axis, tp)
+    return PendingEpilogue(parts=parts, axis=axis, tp=tp, bits=wp.bits,
+                           bs=bs, n=wp.n, n_pad=n_pad,
+                           out_dtype=wp.out_dtype)
+
+
+def ring_finish(pend: PendingEpilogue) -> jax.Array:
+    """Close an in-flight ring: assemble the phase-1 pieces, dequant-
+    accumulate the owned chunk (the only f32 arithmetic, same summation
+    order as the synchronous ``_exchange``), re-quantize, run the
+    decomposed gather phase, and dequantize the assembled result
+    locally."""
+    if pend.bits == 8:
+        q, s = _assemble_collect(pend.parts, pend.axis, pend.tp)
+        red = jnp.sum(_blockwise_dequantize(q, s, pend.bs), axis=0)
+        q2, s2 = _blockwise_quantize(red, pend.bs)
+        qg, sg = _rotate_gather((q2, s2), pend.axis, pend.tp)
+        out = _blockwise_dequantize(_merge_last(qg), _merge_last(sg),
+                                    pend.bs)
+    else:
+        qp, s, z = _assemble_collect(pend.parts, pend.axis, pend.tp)
+        red = jnp.sum(_blockwise_dequantize_int4(
+            _unpack4_last(qp), s, z, pend.bs), axis=0)
+        q2, s2, z2 = _blockwise_quantize_int4(red, pend.bs)
+        qg, sg, zg = _rotate_gather((_pack4_last(q2), s2, z2),
+                                    pend.axis, pend.tp)
+        out = _blockwise_dequantize_int4(
+            _unpack4_last(_merge_last(qg)), _merge_last(sg),
+            _merge_last(zg), pend.bs)
+    out = out[..., :pend.n] if pend.n_pad != pend.n else out
+    return out.astype(pend.out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# comm-level entry points (decomposed ring, no microbatching)
+# ---------------------------------------------------------------------------
+
+def apply_overlapped(y: jax.Array, axis: str, spec, policy=None):
+    """Run the decomposed ring back-to-back — what ``comm.apply`` routes
+    ``:overlap`` specs to when no GEMM is available to pipeline against
+    (bit-identical to the synchronous strategy by construction)."""
+    tp = jax.lax.psum(1, axis)
+    if tp == 1:
+        return y
+    return ring_finish(ring_start(y, axis, spec, tp))
+
+
+def apply_wire_overlapped(wp, axis: str, spec, policy=None):
+    """Decomposed ring from a kernel-emitted ``WirePayload``."""
+    tp = jax.lax.psum(1, axis)
+    return ring_finish(ring_start_wire(wp, axis, spec, tp))
+
+
+# ---------------------------------------------------------------------------
+# the pipelined epilogue (schemes-level entry point)
+# ---------------------------------------------------------------------------
+
+def pipelined_epilogue(y1: jax.Array, *, axis: str, spec, gemm,
+                       gemm_wire=None) -> jax.Array:
+    """Down GEMM + overlapped ring, microbatch-pipelined.
+
+    ``y1`` is the first GEMM's activation (``(..., k)``); ``gemm`` maps a
+    row microbatch of it through the down projection to that rank's
+    partial output, and ``gemm_wire`` (when the ``:fused`` wire kernel
+    applies) maps it to a ``WirePayload`` instead.  The largest leading
+    dim is split into two microbatches; each microbatch's ring phase 1
+    is issued before the next microbatch's GEMM, and closed only after —
+    ``optimization_barrier`` ties make both orderings data dependencies
+    (see module doc), so the collectives' windows provably span a
+    dequant-GEMM in the scheduled program.  Inputs too small to split
+    (no leading dim >= 2) degrade to the unpipelined decomposed ring.
+    """
+    tp = jax.lax.psum(1, axis)
+    if tp == 1:
+        # identity collective at TP=1 — the GEMM output unchanged, like
+        # every synchronous strategy
+        return gemm(y1)
+
+    def start_one(y1_mb, after=None):
+        """GEMM the microbatch and issue its ring; ``after`` is the
+        previous microbatch's pending ring, returned re-threaded through
+        the ordering barriers."""
+        if after is not None and jax.default_backend() == "cpu":
+            # synchronous-collective backends: pin the previous ring's
+            # rotations BEFORE this GEMM (they'd otherwise be free to
+            # sink to just before their use).  Skipped on async backends,
+            # where this would hold the -done early and kill the overlap.
+            y1_mb, after = jax.lax.optimization_barrier((y1_mb, after))
+        if gemm_wire is not None:
+            out = gemm_wire(y1_mb)
+        else:
+            out = gemm(y1_mb)
+        if after is not None:
+            # the previous ring may only close after this GEMM's output
+            # exists — the window every scheduler must respect
+            out, after = jax.lax.optimization_barrier((out, after))
+        pend = (ring_start_wire(out, axis, spec, tp)
+                if gemm_wire is not None
+                else ring_start(out, axis, spec, tp))
+        return pend, after
+
+    split_ax: Optional[int] = None
+    if y1.ndim >= 2:
+        lead = y1.shape[:-1]
+        ax = max(range(len(lead)), key=lambda i: lead[i])
+        if lead[ax] >= 2:
+            split_ax = ax
+    if split_ax is None:
+        pend, _ = start_one(y1)
+        return ring_finish(pend)
+
+    m0 = y1.shape[split_ax] // 2
+    mbs = (jax.lax.slice_in_dim(y1, 0, m0, axis=split_ax),
+           jax.lax.slice_in_dim(y1, m0, y1.shape[split_ax], axis=split_ax))
+    outs = []
+    prev, _ = start_one(mbs[0])
+    for y1_mb in mbs[1:]:
+        pend, prev = start_one(y1_mb, after=prev)
+        outs.append(ring_finish(prev))
+        prev = pend
+    outs.append(ring_finish(prev))
+    return jnp.concatenate(outs, axis=split_ax)

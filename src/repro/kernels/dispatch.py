@@ -120,13 +120,23 @@ def supports_wire(ql: QuantizedLinear, spec, tp: int) -> bool:
     decide whether to mark a chosen spec ``fused``; the runtime gate in
     ``schemes._pair_local_forward`` re-checks it (plus ``spec.fused``),
     so a compiled ``:fused`` plan never dies at forward time."""
-    if getattr(spec, "name", None) not in ("quant-int8", "quant-int4"):
-        return False
+    return wire_support(ql, spec, tp)[0]
+
+
+def wire_support(ql: QuantizedLinear, spec, tp: int) -> tuple[bool, str]:
+    """``supports_wire`` with the reason it fails — ``(True, "")`` when
+    the wire kernel applies, else ``(False, why)``.  The reason string is
+    shape/layout-derived (never trace-dependent), which is what
+    ``schemes._warn_unfusable`` keys its once-per-(site, reason) cache
+    on."""
+    name = getattr(spec, "name", None)
+    if name not in ("quant-int8", "quant-int4"):
+        return False, f"collective {name!r} has no wire payload form"
     if tp <= 1:
-        return False
+        return False, "tp=1 (no ring to feed)"
     if ql.kind != "ordered" or ("ordered", "pallas-fused") not in _REGISTRY:
-        return False
-    return _tileable(ql)[0]
+        return False, f"layout {ql.kind!r} has no wire-epilogue kernel"
+    return _tileable(ql)
 
 
 # ---------------------------------------------------------------------------

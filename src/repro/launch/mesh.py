@@ -27,6 +27,33 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes, devices=devs[:n])
 
 
+def init_distributed(coordinator: str, num_processes: int,
+                     process_id: int) -> None:
+    """Join a multi-controller JAX job (no-op for a single process).
+
+    MUST run before anything touches devices: the CPU collectives
+    implementation is a backend-creation option, so the gloo flag has to
+    be set before the backend initializes — which is also why this module
+    keeps everything behind functions.  TPU fleets ignore the flag (ICI
+    collectives are native); on CPU it is what lets two loopback
+    processes run real ppermute/psum rings over sockets.
+    """
+    if num_processes <= 1:
+        return
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:  # pragma: no cover - flag renamed/absent on new jax
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
+def make_plan_mesh(plan) -> jax.sharding.Mesh:
+    """Materialize a ``dist.MeshPlan`` over the global device grid."""
+    return plan.build_mesh()
+
+
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests/examples)."""
     n = len(jax.devices())

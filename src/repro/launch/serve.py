@@ -35,6 +35,7 @@ Three lifecycles:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -44,11 +45,34 @@ from repro.comm import (CollectivePlan, dispatch as comm_dispatch,
                         parse_collective)
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.policy import ExecutionPolicy
+from repro.dist import MeshPlan
 from repro.launch import mesh as mesh_lib
 from repro.models.common import ParallelContext, REPLICATED
 from repro.runtime.sampling import SamplingConfig
 from repro.runtime.scheduler import Request, Scheduler
 from repro.runtime.serve import make_engine
+
+
+def _mesh_plan(value: str) -> MeshPlan:
+    """argparse type: a ``dp2xtp4``-style device-grid shorthand."""
+    try:
+        return MeshPlan.parse(value)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+
+
+def _dist_args(ap: argparse.ArgumentParser):
+    """Multi-process launch flags (DESIGN.md §11): every process runs the
+    same command with its own ``--process-id``."""
+    ap.add_argument("--mesh", type=_mesh_plan, default=None,
+                    help="device-grid plan, e.g. dp1xtp2 (axes data x "
+                         "model over ALL processes' devices); implies "
+                         "per-rank artifact loading — each process reads "
+                         "only its own rank_NN.npz shards")
+    ap.add_argument("--coordinator", default="127.0.0.1:9911",
+                    help="host:port of process 0 (multi-process launch)")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
 
 
 def _collective(value: str) -> str:
@@ -120,20 +144,33 @@ def prepare(argv=None):
                     help="max relative activation error a tuned "
                          "collective may introduce (default: the "
                          "tuner's DEFAULT_BUDGET, 0.05)")
+    ap.add_argument("--overlap-collectives", action="store_true",
+                    help="mark tuned quantized epilogues ':overlap' — "
+                         "the serve-time ring is decomposed into "
+                         "ppermute rotations pipelined against the next "
+                         "microbatch's dequant-GEMM (bit-identical; "
+                         "requires --autotune-collectives)")
     args = ap.parse_args(argv)
+    if args.overlap_collectives and not args.autotune_collectives:
+        ap.error("--overlap-collectives requires --autotune-collectives")
 
     cfg = _build_cfg(args)
-    policy = ExecutionPolicy.from_config(cfg)
+    # record the intended grid in the manifest (provenance: validate pins
+    # only the TP degree, so serving may widen dp without re-preparing)
+    policy = ExecutionPolicy.from_config(cfg).with_(
+        mesh=MeshPlan(dp=1, tp=args.tp))
     t0 = time.time()
     art = compiler.prepare(cfg, tp=args.tp, seed=args.seed, policy=policy,
                            extra_manifest={"smoke": bool(args.smoke)},
                            autotune=args.autotune_collectives,
-                           tune_budget=args.tune_budget)
+                           tune_budget=args.tune_budget,
+                           tune_overlap=args.overlap_collectives)
     path = art.save(args.out)
     dt = time.time() - t0
     n_pairs = len(art.manifest["pairs"])
     print(f"prepared {args.arch} (scheme={args.scheme} "
           f"collective={art.manifest['policy']['collective']} "
+          f"mesh={policy.mesh.shorthand()} "
           f"tp={args.tp}) -> {path}: {n_pairs} planned pair(s), "
           f"{len(art.manifest['leaf_shards'])} leaves, {dt:.1f}s")
     for site in art.manifest.get("collective_tuner", ()):
@@ -144,7 +181,7 @@ def prepare(argv=None):
     return path
 
 
-def _load_artifact(args):
+def _load_artifact(args, *, manifest_only: bool = False):
     """Reconstruct (cfg, policy, artifact) from an artifact directory.
 
     The manifest is the single source of truth for the plan: the CLI's
@@ -152,10 +189,19 @@ def _load_artifact(args):
     --tp defaults to the artifact's degree (an explicit --tp > 1 that
     disagrees fails ``validate``).  To serve a different plan, re-run
     ``prepare``.
+
+    ``manifest_only`` (mesh mode): read just ``manifest.json`` and return
+    a shell artifact with no rank pytrees — the engine loads this
+    process's shards per-rank later, so the launcher never materializes
+    ranks it doesn't own.
     """
     from repro.plan import DeploymentArtifact
 
-    art = DeploymentArtifact.load(args.artifact)
+    if manifest_only:
+        art = DeploymentArtifact(
+            manifest=DeploymentArtifact.load_manifest(args.artifact))
+    else:
+        art = DeploymentArtifact.load(args.artifact)
     man = art.manifest
     cfg = (get_smoke_config(man["arch_id"]) if man.get("smoke")
            else get_config(man["arch_id"]))
@@ -175,6 +221,35 @@ def _load_artifact(args):
     return cfg, policy, art, tp
 
 
+def _run_multiprocess(args, cfg, engine, tp):
+    """Synthetic-batch generation for multi-controller launches.
+
+    The Scheduler/HTTP front ends are single-controller (host-side
+    per-request admission and slot bookkeeping); under
+    ``jax.distributed`` every process must instead step the same
+    lockstep program — one padded batch through ``engine.generate``.
+    Sampling happens host-side on replicated logits with identical rngs,
+    so every process emits identical tokens (the printed ``first=``
+    prefix can be diffed across processes as a cheap coherence check).
+    The batch must be divisible by the mesh's dp degree.
+    """
+    rng = np.random.default_rng(args.seed)
+    b = args.max_batch
+    plen = min(max(4, args.prompt_budget // 2), args.prompt_budget)
+    tokens = rng.integers(0, cfg.vocab_size, size=(b, plen)).astype(np.int32)
+    prompt_len = np.full((b,), plen, np.int32)
+    t0 = time.time()
+    toks = np.asarray(engine.generate(
+        jax.random.PRNGKey(args.seed), {"tokens": tokens}, prompt_len,
+        max_new_tokens=args.max_new))
+    dt = time.time() - t0
+    total = toks.shape[0] * toks.shape[1]
+    print(f"process {jax.process_index()}/{jax.process_count()}: "
+          f"generated {toks.shape[0]}x{toks.shape[1]} tokens in {dt:.1f}s "
+          f"({total / dt:.1f} tok/s) first={toks[0, :8].tolist()}",
+          flush=True)
+
+
 def main(argv=None):
     import sys
 
@@ -184,6 +259,7 @@ def main(argv=None):
 
     ap = argparse.ArgumentParser()
     _plan_args(ap)
+    _dist_args(ap)
     ap.add_argument("--artifact", default=None,
                     help="serve a prepared DeploymentArtifact directory "
                          "(skips quantize/plan at startup; the manifest "
@@ -206,8 +282,20 @@ def main(argv=None):
                          "answers 429 + Retry-After (HTTP mode)")
     args = ap.parse_args(argv)
 
+    # multi-controller join MUST precede the first device/backend touch
+    # (artifact loading already puts leaves on device)
+    mesh_lib.init_distributed(args.coordinator, args.num_processes,
+                              args.process_id)
+
+    if args.mesh is not None and args.tp <= 1:
+        args.tp = args.mesh.tp
+
     if args.artifact:
-        cfg, policy, artifact, tp = _load_artifact(args)
+        cfg, policy, artifact, tp = _load_artifact(
+            args, manifest_only=args.mesh is not None)
+        if args.mesh is not None:
+            # engine loads this process's shards per-rank from the path
+            artifact = args.artifact
     else:
         cfg = _build_cfg(args)
         policy = ExecutionPolicy.from_config(cfg)
@@ -223,7 +311,18 @@ def main(argv=None):
                           for pat, spec in plan.entries)
               + f", default -> {plan.default.shorthand()}")
 
-    if tp > 1:
+    if args.mesh is not None:
+        if args.mesh.tp != tp:
+            raise SystemExit(
+                f"--mesh {args.mesh.shorthand()} (tp={args.mesh.tp}) "
+                f"disagrees with the plan's TP degree {tp}")
+        # downstream BENCH_* snapshots record the serving grid
+        os.environ["REPRO_MESH"] = args.mesh.shorthand()
+        policy = policy.with_(mesh=args.mesh)
+        mesh = args.mesh.build_mesh()
+        ctx = ParallelContext(mesh=mesh, batch_axes=("data",),
+                              policy=policy)
+    elif tp > 1:
         mesh = mesh_lib.make_host_mesh(model=tp)
         ctx = ParallelContext(mesh=mesh, batch_axes=("data",),
                               policy=policy)
@@ -232,7 +331,22 @@ def main(argv=None):
 
     max_seq = args.prompt_budget + args.max_new + 1
     engine = make_engine(cfg, jax.random.PRNGKey(args.seed), ctx=ctx,
-                         max_seq=max_seq, policy=policy, artifact=artifact)
+                         max_seq=max_seq, policy=policy, artifact=artifact,
+                         per_rank=True if (args.mesh is not None
+                                           and args.artifact) else None)
+
+    if args.mesh is not None:
+        st = engine.load_stats
+        resident = (f"resident_artifact_bytes="
+                    f"{st.file_bytes_loaded}/{st.file_bytes_total} "
+                    f"ranks={list(st.ranks)}" if st is not None
+                    else "resident_artifact_bytes=n/a (in-memory plan)")
+        print(f"mesh={args.mesh.shorthand()} "
+              f"process={jax.process_index()}/{jax.process_count()} "
+              f"{resident}", flush=True)
+
+    if jax.process_count() > 1:
+        return _run_multiprocess(args, cfg, engine, tp)
 
     if args.http is not None:
         from repro.serving import ServingServer

@@ -20,6 +20,27 @@ from repro.models import transformer as tfm
 from repro.models.common import ParallelContext
 
 
+#: decoder self-attention consumes precompiled V->O folds (artifact aux
+#: plans) — the registry only forwards ``aux`` to modules declaring it.
+#: Cross-attention layers are NOT folded into the runtime path: their
+#: K/V is patch-derived and precomputed (``precompute_cross``), so the
+#: fold's within-head-block permutation has nothing to commute with.
+SUPPORTS_ATTN_VO = True
+
+#: dotted path ``stage_fold_attention`` records the stacked
+#: (n_super, n_self) decoder self-attention dicts under.
+ATTN_VO_PATH = "super.self.attn"
+
+
+def _self_vo(aux):
+    """The stacked (ns, nself) V->O ``PlannedPair`` for the decoder self
+    layers, if the artifact carried one (scanned alongside the params:
+    the outer scan peels ns, the inner scan peels nself)."""
+    if not aux:
+        return None
+    return (aux.get("attn_plans") or {}).get(ATTN_VO_PATH)
+
+
 def _n_super(cfg: ModelConfig):
     assert cfg.num_layers % cfg.cross_attn_every == 0
     return cfg.num_layers // cfg.cross_attn_every, cfg.cross_attn_every - 1
@@ -109,7 +130,7 @@ def _cross_layer_fwd(cfg, ctx):
 
 
 def forward(cfg: ModelConfig, params, batch, ctx: ParallelContext, *,
-            window=None):
+            window=None, aux=None):
     """batch: {"tokens": (B, S), "patches": (B, vision_tokens, d)}."""
     patches = batch["patches"]
     x = cm.embed_tokens(cfg, params["embed"], batch["tokens"], ctx)
@@ -121,7 +142,13 @@ def forward(cfg: ModelConfig, params, batch, ctx: ParallelContext, *,
         x = cm.scan_layers(self_fwd, x, sp["self"], ctx)
         return cross_fwd(x, sp["cross"], patches)
 
-    x = cm.scan_layers(super_body, x, params["super"], ctx)
+    sup = params["super"]
+    vo = _self_vo(aux)
+    if vo is not None:
+        # rides the scans next to the self-layer params; tfm._layer's
+        # body picks it up as lp["attn_vo"]
+        sup = dict(sup, self=dict(sup["self"], attn_vo=vo))
+    x = cm.scan_layers(super_body, x, sup, ctx)
     x = cm.apply_norm(cfg, params["final_norm"], x)
     return cm.lm_head(cfg, params["embed"], x, ctx)
 
@@ -178,14 +205,15 @@ def precompute_cross(cfg: ModelConfig, params, patches, ctx: ParallelContext):
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
-                ctx: ParallelContext, *, window=None, pages=None):
+                ctx: ParallelContext, *, window=None, pages=None, aux=None):
     x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
 
     def self_body(x, xs):
         lp, lc = xs
         h, nc = cm.attention_decode(cfg, lp["attn"],
                                     cm.apply_norm(cfg, lp["ln1"], x),
-                                    lc, pos, ctx, window=window, pages=pages)
+                                    lc, pos, ctx, window=window, pages=pages,
+                                    vo=lp.get("attn_vo"))
         x = x + h
         h = cm.mlp_forward(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x),
                            ctx, path="super.self.mlp")
@@ -207,10 +235,14 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
         return x.astype(carry_dtype), nsc
 
     carry_dtype = x.dtype
+    sup = params["super"]
+    vo = _self_vo(aux)
+    if vo is not None:
+        sup = dict(sup, self=dict(sup["self"], attn_vo=vo))
     x, nself = jax.lax.scan(
         super_body, x,
-        (params["super"], (cache["self"],
-                           cache["cross_k"], cache["cross_v"])))
+        (sup, (cache["self"],
+               cache["cross_k"], cache["cross_v"])))
     x = cm.apply_norm(cfg, params["final_norm"], x)
     logits = cm.lm_head(cfg, params["embed"], x, ctx)
     return logits[:, 0], {"self": nself, "cross_k": cache["cross_k"],

@@ -51,11 +51,12 @@ def config_hash(cfg) -> str:
 def policy_fields(policy: ExecutionPolicy) -> dict:
     """The manifest's view of an ``ExecutionPolicy`` (strings only).
 
-    ``kv`` is recorded for provenance (so a served stats endpoint and the
-    artifact agree on what was prepared) but excluded from ``validate``'s
-    comparison: the cache layout is a pure runtime decision — the weight
-    plan is identical under dense and paged serving, and an operator may
-    flip paging on per deployment without re-running prepare.
+    ``kv`` and ``mesh`` are recorded for provenance (so a served stats
+    endpoint and the artifact agree on what was prepared) but excluded
+    from ``validate``'s comparison: the cache layout is a pure runtime
+    decision, and the device grid may differ per deployment as long as
+    the model-axis degree matches the shards (which ``validate``'s
+    ``tp`` check pins) — an artifact prepared dp1xtp2 serves dp4xtp2.
     """
     return {
         "scheme": policy.scheme,
@@ -64,16 +65,26 @@ def policy_fields(policy: ExecutionPolicy) -> dict:
         "accum_dtype": jnp.dtype(policy.accum_dtype).name,
         "collective": policy.collective.shorthand(),
         "kv": policy.kv.shorthand(),
+        "mesh": policy.mesh.shorthand(),
     }
 
 
 @dataclasses.dataclass(frozen=True)
 class DeploymentArtifact:
-    """Frozen (manifest, per-rank planned pytrees, aux) triple."""
+    """Frozen (manifest, per-rank planned pytrees, aux) triple.
+
+    Two load shapes: ``load`` holds every rank's host pytree in
+    ``rank_params`` (single-process serving; ``params`` reassembles);
+    ``load_for_mesh`` holds NO host copies — ``global_params`` is the
+    already-device-sharded tree assembled from only this process's rank
+    files (``dist/loader.py``), and ``load_stats`` is the byte ledger
+    proving which files were read."""
 
     manifest: dict
-    rank_params: tuple               # tp per-rank planned pytrees
+    rank_params: tuple = ()          # tp per-rank planned pytrees
     aux: Optional[dict] = None       # e.g. {"attn_plans": {path: pairs}}
+    global_params: Any = None        # mesh-sharded tree (load_for_mesh)
+    load_stats: Any = None           # dist.loader.RankLoadStats
 
     # ---- construction -----------------------------------------------------
 
@@ -132,7 +143,8 @@ class DeploymentArtifact:
         return ExecutionPolicy(
             scheme=p["scheme"], backend=p["backend"],
             compute_dtype=p["compute_dtype"], accum_dtype=p["accum_dtype"],
-            collective=p["collective"], kv=p.get("kv", "dense"))
+            collective=p["collective"], kv=p.get("kv", "dense"),
+            mesh=p.get("mesh"))
 
     def rank_tree(self, r: int):
         return self.rank_params[r]
@@ -144,6 +156,14 @@ class DeploymentArtifact:
         this is bit-exact with the in-memory compile."""
         from repro.train import checkpoint
 
+        if self.global_params is not None:
+            # load_for_mesh already assembled the device-sharded tree
+            return self.global_params
+        if not self.rank_params:
+            raise ValueError(
+                "artifact holds no rank pytrees (loaded per-rank for a "
+                "mesh without assembled params?) — use load_for_mesh's "
+                "global_params or reload with DeploymentArtifact.load")
         shards = self.manifest["leaf_shards"]
         flats = [checkpoint.flatten_keys(t) for t in self.rank_params]
         keys = list(flats[0])
@@ -176,10 +196,13 @@ class DeploymentArtifact:
         if policy is not None:
             want = policy_fields(policy)
             have = dict(self.manifest["policy"])
-            # cache layout is runtime-only (see policy_fields): an artifact
-            # prepared dense serves paged and vice versa
-            want.pop("kv", None)
-            have.pop("kv", None)
+            # cache layout and device grid are runtime-only (see
+            # policy_fields): an artifact prepared dense serves paged,
+            # and dp may differ — only the TP degree (checked below
+            # against the shards) is load-bearing
+            for k in ("kv", "mesh"):
+                want.pop(k, None)
+                have.pop(k, None)
             if want != have:
                 raise PlanMismatchError(
                     f"policy {want} != artifact's plan {have}")
@@ -194,6 +217,10 @@ class DeploymentArtifact:
     def save(self, dirpath: str) -> str:
         from repro.train import checkpoint
 
+        if not self.rank_params:
+            raise ValueError(
+                "cannot re-save an artifact loaded per-rank for a mesh: "
+                "this process holds only its own ranks' shards")
         os.makedirs(dirpath, exist_ok=True)
         with open(os.path.join(dirpath, MANIFEST), "w") as f:
             json.dump(self.manifest, f, indent=1, sort_keys=True)
@@ -204,9 +231,10 @@ class DeploymentArtifact:
         return dirpath
 
     @classmethod
-    def load(cls, dirpath: str) -> "DeploymentArtifact":
-        from repro.train import checkpoint
-
+    def load_manifest(cls, dirpath: str) -> dict:
+        """Read and format-check just ``manifest.json`` — the only file a
+        distributed process touches before deciding which rank shards it
+        owns (``load_for_mesh``)."""
         mpath = os.path.join(dirpath, MANIFEST)
         if not os.path.exists(mpath):
             raise FileNotFoundError(
@@ -217,9 +245,34 @@ class DeploymentArtifact:
             raise PlanMismatchError(
                 f"artifact format v{manifest.get('format_version')} != "
                 f"supported v{FORMAT_VERSION}")
+        return manifest
+
+    @classmethod
+    def load(cls, dirpath: str) -> "DeploymentArtifact":
+        from repro.train import checkpoint
+
+        manifest = cls.load_manifest(dirpath)
         ranks = tuple(
             checkpoint.load(os.path.join(dirpath, f"rank_{r:02d}.npz"))
             for r in range(int(manifest["tp"])))
         aux_path = os.path.join(dirpath, "aux.npz")
         aux = checkpoint.load(aux_path) if os.path.exists(aux_path) else None
         return cls(manifest=manifest, rank_params=ranks, aux=aux)
+
+    @classmethod
+    def load_for_mesh(cls, dirpath: str,
+                      mesh: "jax.sharding.Mesh") -> "DeploymentArtifact":
+        """Distributed load (DESIGN.md §11): read only the ``rank_NN.npz``
+        files whose model-axis coordinates this process's devices own and
+        assemble ``global_params`` as mesh-sharded ``jax.Array`` leaves —
+        no host ever materializes another rank's slices.  ``rank_params``
+        is left empty; ``load_stats`` records the byte ledger."""
+        from repro.dist import loader as dist_loader
+        from repro.train import checkpoint
+
+        manifest = cls.load_manifest(dirpath)
+        params, stats = dist_loader.load_per_rank(dirpath, manifest, mesh)
+        aux_path = os.path.join(dirpath, "aux.npz")
+        aux = checkpoint.load(aux_path) if os.path.exists(aux_path) else None
+        return cls(manifest=manifest, rank_params=(), aux=aux,
+                   global_params=params, load_stats=stats)

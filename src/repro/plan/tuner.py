@@ -176,13 +176,23 @@ def _probe_site(pp, tp: int, rng, calib_batch: int, candidates,
 def autotune_collectives(state, mesh=None, *,
                          budget: float = DEFAULT_BUDGET,
                          calib_batch: int = 8,
-                         candidates=None):
+                         candidates=None,
+                         overlap: bool = False):
     """Compiler stage: choose a per-layer ``CollectivePlan`` for ``state``.
 
     ``mesh`` (optional) only supplies the TP degree when ``state.tp`` is
     unset — the probe itself is mesh-free (see ``simulate_wire``).
     Returns a new ``PlanState`` whose policy carries the tuned plan and
     whose ``tuner_report`` records every candidate's score per site.
+
+    ``overlap=True`` (opt-in, the CLI's ``--overlap-collectives``)
+    additionally marks each chosen *quantized* pair-site spec
+    ``:overlap`` — the runtime then decomposes the two-phase ring into
+    ppermute rotations pipelined against the next microbatch's
+    dequant-GEMM (``dist/overlap.py``).  Bit-identical to the
+    synchronous epilogue, so the tuned scores carry over unchanged;
+    never applied to attn_vo sites (their epilogue closes through
+    GSPMD, not the explicit-collective path).
     """
     tp = state.tp
     if tp is None and mesh is not None:
@@ -234,11 +244,15 @@ def autotune_collectives(state, mesh=None, *,
                 if win is not None and win.get("fusable"):
                     chosen = chosen.with_(fused=True)
                     scores[chosen.shorthand()] = {**win, "spec": chosen}
+                if overlap and chosen.name in ("quant-int8", "quant-int4"):
+                    # same wire bytes + numerics, the ring just overlaps
+                    # the next microbatch's GEMM (see docstring)
+                    chosen = chosen.with_(overlap=True)
         entries.append((path, chosen))
         report.append({
             "path": path, "kind": kind, "tp": tp, "budget": budget,
             "status": status, "chosen": chosen.shorthand(),
-            "fused": chosen.fused,
+            "fused": chosen.fused, "overlap": chosen.overlap,
             "candidates": {
                 short: {"rel_err": v["rel_err"],
                         "bytes_per_token": v["bytes_per_token"]}

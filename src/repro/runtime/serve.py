@@ -18,6 +18,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policy import ExecutionPolicy
 from repro.models.common import ParallelContext, REPLICATED
@@ -40,6 +41,10 @@ class Engine:
     # The artifact's aux plans (precompiled attention V->O folds) — closed
     # over by the jitted step functions for families that consume them.
     aux: Optional[Any] = None
+    # Per-rank load ledger (``dist.loader.RankLoadStats``) when the params
+    # came from ``DeploymentArtifact.load_for_mesh`` — surfaced so the
+    # launcher/banner can report which rank files this process read.
+    load_stats: Optional[Any] = None
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -78,6 +83,27 @@ class Engine:
         self._prefill = jax.jit(prefill_logits)
         self._decode = jax.jit(decode, donate_argnums=1)
         self._reset_slot = jax.jit(reset_slot, donate_argnums=0)
+        self._replicate = None   # lazily-built logits all-gather (multiproc)
+
+    # ------------------------------------------------------------------
+    def _host(self, logits):
+        """Logits -> host values the eager sampling/scheduling code may
+        touch.  Single-controller: the array is fully addressable, return
+        it as-is (zero cost).  Multi-controller: jitted outputs can be
+        sharded over the data axis, and eager ops on non-addressable
+        global arrays raise — all-gather to replicated (a jitted identity
+        with ``out_shardings=P()``) and pull to numpy; every process then
+        steps the same host-side sampling, keeping the controllers in
+        lockstep."""
+        if jax.process_count() == 1:
+            return logits
+        if self._replicate is None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            self._replicate = jax.jit(
+                lambda a: a,
+                out_shardings=NamedSharding(self.ctx.mesh, P()))
+        return np.asarray(self._replicate(logits))
 
     # ------------------------------------------------------------------
     @property
@@ -157,7 +183,7 @@ class Engine:
             cache, last = carry
             logits, cache = decode(self.params, cache, tokens[:, t], t)
             keep = (t == prompt_len - 1)[:, None]
-            last = jnp.where(keep, logits, last)
+            last = jnp.where(keep, self._host(logits), last)
             return (cache, last), None
 
         # python loop over prompt positions (jit'd step): keeps memory flat
@@ -186,7 +212,7 @@ class Engine:
         for i in range(max_new_tokens - 1):
             rng, sub = jax.random.split(rng)
             logits, cache = self._decode(self.params, cache, tok, pos + i)
-            tok = sampling.sample(sub, logits, scfg)
+            tok = sampling.sample(sub, self._host(logits), scfg)
             out.append(tok)
         return jnp.stack(out, axis=1)
 
@@ -194,7 +220,7 @@ class Engine:
 def make_engine(cfg, rng=None, *, ctx: ParallelContext = REPLICATED,
                 max_seq: int = 2048, window=None,
                 policy: Optional[ExecutionPolicy] = None,
-                artifact=None) -> Engine:
+                artifact=None, per_rank: Optional[bool] = None) -> Engine:
     """Build a serving engine.
 
     ``artifact``: a ``DeploymentArtifact`` (or its directory path) from
@@ -204,14 +230,30 @@ def make_engine(cfg, rng=None, *, ctx: ParallelContext = REPLICATED,
     policy, and the mesh's model-axis degree (a mismatched plan raises
     ``PlanMismatchError`` instead of silently serving).  Without an
     artifact, ``Model.init`` runs the identical compiler in memory.
+
+    ``per_rank``: load the artifact via ``load_for_mesh`` — each process
+    reads only its own ranks' ``rank_NN.npz`` files and assembles
+    mesh-sharded global arrays (DESIGN.md §11).  Default (None): on when
+    this is a multi-process launch.  Requires a directory path and a mesh.
     """
     model = build_model(cfg)
     aux = None
+    load_stats = None
     if artifact is not None:
         from repro.plan import DeploymentArtifact
 
+        if per_rank is None:
+            per_rank = jax.process_count() > 1
         if isinstance(artifact, (str, bytes)):
-            artifact = DeploymentArtifact.load(artifact)
+            if per_rank:
+                if ctx.mesh is None:
+                    raise ValueError(
+                        "per-rank artifact loading needs a mesh (pass a "
+                        "ParallelContext with ctx.mesh set)")
+                artifact = DeploymentArtifact.load_for_mesh(artifact,
+                                                            ctx.mesh)
+            else:
+                artifact = DeploymentArtifact.load(artifact)
         eff_policy = policy
         if eff_policy is None:
             eff_policy = (ctx.policy if ctx.policy is not None
@@ -220,7 +262,9 @@ def make_engine(cfg, rng=None, *, ctx: ParallelContext = REPLICATED,
         artifact.validate(cfg=cfg, policy=eff_policy, tp=tp)
         params = artifact.params()
         aux = artifact.aux   # precompiled V->O folds (None when absent)
+        load_stats = artifact.load_stats
     else:
         params = model.init(rng if rng is not None else jax.random.PRNGKey(0))
     return Engine(model=model, params=params, ctx=ctx, max_seq=max_seq,
-                  window=window, policy=policy, aux=aux)
+                  window=window, policy=policy, aux=aux,
+                  load_stats=load_stats)

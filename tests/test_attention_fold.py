@@ -161,3 +161,41 @@ def test_engine_serves_artifact_aux_folds():
     cache = eng.init_cache(1)
     lg, _ = eng._decode(eng.params, cache, jnp.array([3]), jnp.int32(0))
     assert lg.shape == (1, cfg.vocab_size)
+
+
+def test_vision_llama_decoder_consumes_vo_fold():
+    """The VLM family threads artifact aux folds into its decoder
+    self-attention (``SUPPORTS_ATTN_VO``): ``stage_fold_attention``
+    plans both the self and cross attention dicts, the runtime consumes
+    the ``super.self.attn`` path in forward AND decode, and the folded
+    logits differ from the no-aux path (quantized V/O pipeline)."""
+    from repro.configs import get_smoke_config
+    from repro.models.common import REPLICATED
+    from repro.models.registry import build_model
+    from repro.plan import compiler
+
+    cfg = get_smoke_config("llama-3.2-vision-90b").with_quant(
+        attn_tp_aware=True)
+    model = build_model(cfg)
+    assert model.supports_attn_vo
+    art = compiler.prepare(cfg, tp=1, seed=0)
+    plans = art.aux["attn_plans"]
+    # the fold stage walks the whole tree: decoder self layers (stacked
+    # (n_super, n_self)) and the gated cross layers both get plans
+    assert "super.self.attn" in plans and "super.cross.xattn" in plans
+    assert plans["super.self.attn"].up.qweight.ndim == 4  # 2 stack dims
+
+    params = art.params()
+    batch = model.make_batch(jax.random.PRNGKey(1), 2, 6)
+    y_vo = model.forward(params, batch, REPLICATED, aux=art.aux)
+    y_plain = model.forward(params, batch, REPLICATED)
+    assert y_vo.shape == (2, 6, cfg.vocab_size)
+    assert float(jnp.max(jnp.abs(y_vo - y_plain))) > 0
+
+    cache = model.init_cache(2, 8)
+    lg, cache2 = model.decode_step(params, cache, batch["tokens"][:, 0],
+                                   jnp.int32(0), REPLICATED, aux=art.aux)
+    lg_plain, _ = model.decode_step(params, cache, batch["tokens"][:, 0],
+                                    jnp.int32(0), REPLICATED)
+    assert lg.shape == (2, cfg.vocab_size)
+    assert float(jnp.max(jnp.abs(lg - lg_plain))) > 0
