@@ -144,6 +144,39 @@ def bytes_on_wire(spec: CollectiveSpec, shape, tp: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# raw-primitive facade
+# ---------------------------------------------------------------------------
+# The only sanctioned spellings of ``jax.lax`` collectives outside comm/
+# and dist/ (``repro.analysis.ast_lint`` rule AS001): scheme and model
+# code goes through these wrappers, so every cross-rank byte traces to a
+# site the roofline cost model and the plan compiler account for.
+
+def axis_size(axis: str) -> int:
+    """Ring size of a named mesh axis (``lax.psum(1, axis)``)."""
+    return jax.lax.psum(1, axis)
+
+
+def raw_psum(y: jax.Array, axis: str) -> jax.Array:
+    """Full-precision all-reduce outside the strategy registry — for
+    epilogues whose output contract is structural (e.g. MoE within-expert
+    reduction), not a tunable quality/bytes trade-off."""
+    return jax.lax.psum(y, axis)
+
+
+def all_gather_cols(y: jax.Array, axis: str) -> jax.Array:
+    """Gather last-dim shards into the full tensor (tiled) — the naive
+    scheme's Algorithm-2 line-2 gather."""
+    return jax.lax.all_gather(y, axis, axis=y.ndim - 1, tiled=True)
+
+
+def all_to_all(x: jax.Array, axis: str, *, split_axis: int,
+               concat_axis: int) -> jax.Array:
+    """Tiled all_to_all (the MoE dispatch/return token shuffle)."""
+    return jax.lax.all_to_all(x, axis, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+
+# ---------------------------------------------------------------------------
 # shared helpers
 # ---------------------------------------------------------------------------
 

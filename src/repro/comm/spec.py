@@ -214,6 +214,15 @@ class CollectiveSpec:
         return dispatch.resolve(self.name).bytes_on_wire(
             tuple(shape), int(tp), self)
 
+    def site_predictions(self, paths, shape, tp: int) -> dict:
+        """Per-site analytic prediction table ``{path: {"spec", "bytes"}}``
+        for the given pair paths — what ``repro.analysis``'s HLO linter
+        checks measured modules against (a bare spec predicts the same
+        cost at every site; see ``CollectivePlan.site_predictions``)."""
+        return {path: {"spec": self.resolve(path).shorthand(),
+                       "bytes": self.resolve(path).bytes_on_wire(shape, tp)}
+                for path in paths}
+
 
 # ---------------------------------------------------------------------------
 # per-layer plans
@@ -338,6 +347,15 @@ class CollectivePlan:
         if self.default not in out:
             out.append(self.default)
         return tuple(out)
+
+    def site_predictions(self, paths, shape, tp: int) -> dict:
+        """Per-site analytic prediction table ``{path: {"spec", "bytes"}}``
+        — each path resolves its own spec, so this is the plan-level
+        ground truth ``repro.analysis`` checks measured HLO and artifact
+        manifests against (uniform for a bare ``CollectiveSpec``)."""
+        return {path: {"spec": self.resolve(path).shorthand(),
+                       "bytes": self.resolve(path).bytes_on_wire(shape, tp)}
+                for path in paths}
 
 
 def parse_collective(value) -> Union[CollectiveSpec, CollectivePlan]:

@@ -207,7 +207,7 @@ def _pair_local_forward(
             y1 = g * y1
         elif activation:
             y1 = act(y1)
-        y1_full = jax.lax.all_gather(y1, axis, axis=-1, tiled=True)  # l.2
+        y1_full = comm.all_gather_cols(y1, axis)                 # l.2
         y1 = jnp.take(y1_full, pp.p2, axis=-1)            # l.3+l.4 fused:
         # local P2 chunk both permutes and chunks the gathered tensor.
     elif pp.scheme == "tp-aware":
@@ -236,7 +236,7 @@ def _pair_local_forward(
     if spec.fused:
         from repro.kernels import dispatch as kdispatch
 
-        tp = jax.lax.psum(1, axis)
+        tp = comm.axis_size(axis)
         use_wire, reason = kdispatch.wire_support(pp.down, spec, tp)
         if not use_wire:
             _warn_unfusable(pair_path, pp, reason)
@@ -244,7 +244,7 @@ def _pair_local_forward(
         from repro.dist import overlap as dist_overlap
         from repro.kernels import dispatch as kdispatch
 
-        tp = jax.lax.psum(1, axis)
+        tp = comm.axis_size(axis)
         gemm_wire = (functools.partial(
             kdispatch.qmatmul_wire, ql=pp.down, policy=policy, spec=spec,
             tp=tp) if use_wire else None)
@@ -254,7 +254,7 @@ def _pair_local_forward(
     if use_wire:
         from repro.kernels import dispatch as kdispatch
 
-        tp = jax.lax.psum(1, axis)
+        tp = comm.axis_size(axis)
         wp = kdispatch.qmatmul_wire(y1, pp.down, policy, spec=spec, tp=tp)
         return comm.apply_wire(wp, axis, spec, policy)
     y2 = mm(y1, pp.down)                             # l.2 / l.5 down GEMM

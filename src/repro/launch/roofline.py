@@ -55,6 +55,7 @@ _TUPLE_INSTR_RE = re.compile(
 _SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([\d,]*)\]")
 _GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([A-Za-z0-9_.\-]+)\s*=")
 
 
 def _shape_bytes(dtype: str, dims: str) -> float:
@@ -65,19 +66,37 @@ def _shape_bytes(dtype: str, dims: str) -> float:
     return n * _DTYPE_BYTES.get(dtype, 4)
 
 
-def parse_collective_bytes(hlo_text: str, *, chips: int) -> dict:
-    """Per-device ICI bytes by collective kind, modeled from compiled HLO.
-
-    Ring cost model (g = replica-group size, R = result bytes per device):
+def _ring_bytes(kind: str, r: float, g: int) -> float:
+    """Ring cost model (g = replica-group size, R = result bytes/device):
       all-gather       : R × (g-1)/g      (result is the gathered tensor)
       all-reduce       : R × 2(g-1)/g     (reduce-scatter + all-gather)
       reduce-scatter   : R × (g-1)        (input = R×g, moves (g-1)/g of it)
       all-to-all       : R × (g-1)/g
       collective-permute: R               (point-to-point)
     """
-    out = {k: 0.0 for k in _COLLECTIVES}
-    counts = {k: 0 for k in _COLLECTIVES}
-    for line in hlo_text.splitlines():
+    if kind == "all-gather":
+        return r * (g - 1) / g
+    if kind == "all-reduce":
+        return r * 2 * (g - 1) / g
+    if kind == "reduce-scatter":
+        return r * (g - 1)
+    if kind == "all-to-all":
+        return r * (g - 1) / g
+    return r  # collective-permute
+
+
+def iter_collectives(hlo_text: str, *, chips: int):
+    """Structured per-instruction view of a module's collectives.
+
+    Yields one dict per matched collective instruction — the substrate
+    ``repro.analysis.hlo_lint``'s rule engine and the byte accounting
+    below share: ``{"kind", "name", "line", "dtype", "result_bytes",
+    "group", "bytes"}`` where ``bytes`` applies the ring cost model and
+    ``group`` is the replica-group size (``chips`` when the instruction
+    names none).  ``dtype`` is None for tuple-result forms (mixed
+    payload/scale dtypes).
+    """
+    for lineno, line in enumerate(hlo_text.splitlines(), 1):
         m = _INSTR_RE.search(line)
         if m:
             dtype, dims, kind = m.groups()
@@ -87,6 +106,7 @@ def parse_collective_bytes(hlo_text: str, *, chips: int) -> dict:
             if not m:
                 continue
             shapes, kind = m.groups()
+            dtype = None
             r = sum(_shape_bytes(dt, dims)
                     for dt, dims in _SHAPE_RE.findall(shapes))
         g = chips
@@ -98,18 +118,26 @@ def parse_collective_bytes(hlo_text: str, *, chips: int) -> dict:
             if mi:
                 g = int(mi.group(2))
         g = max(g, 1)
-        if kind == "all-gather":
-            b = r * (g - 1) / g
-        elif kind == "all-reduce":
-            b = r * 2 * (g - 1) / g
-        elif kind == "reduce-scatter":
-            b = r * (g - 1)
-        elif kind == "all-to-all":
-            b = r * (g - 1) / g
-        else:  # collective-permute
-            b = r
-        out[kind] += b
-        counts[kind] += 1
+        mn = _NAME_RE.match(line)
+        yield {
+            "kind": kind,
+            "name": mn.group(1) if mn else "",
+            "line": lineno,
+            "dtype": dtype,
+            "result_bytes": r,
+            "group": g,
+            "bytes": _ring_bytes(kind, r, g),
+        }
+
+
+def parse_collective_bytes(hlo_text: str, *, chips: int) -> dict:
+    """Per-device ICI bytes by collective kind, modeled from compiled HLO
+    (ring cost model — see ``_ring_bytes``)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for instr in iter_collectives(hlo_text, chips=chips):
+        out[instr["kind"]] += instr["bytes"]
+        counts[instr["kind"]] += 1
     out["total_per_device"] = sum(out[k] for k in _COLLECTIVES)
     out["counts"] = counts
     return out

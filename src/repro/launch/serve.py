@@ -250,12 +250,50 @@ def _run_multiprocess(args, cfg, engine, tp):
           flush=True)
 
 
+def verify(argv=None):
+    """``serve verify --artifact DIR``: static audit of a prepared
+    artifact — the offline manifest lint (``repro.analysis``, MF rules)
+    plus the collective dtype/shape contracts for exactly the specs the
+    artifact's plan resolves, at the artifact's TP degree.  No model is
+    built and no FLOPs are spent; exit 1 on error-severity findings."""
+    ap = argparse.ArgumentParser(prog="repro.launch.serve verify")
+    ap.add_argument("--artifact", required=True,
+                    help="prepared DeploymentArtifact directory")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write findings as JSON")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import contracts, manifest_lint
+    from repro.analysis.findings import has_errors, to_json_text
+    from repro.comm.spec import parse_collective
+    from repro.plan import DeploymentArtifact
+
+    manifest = DeploymentArtifact.load_manifest(args.artifact)
+    findings = manifest_lint.run(artifact=args.artifact)
+    coll = parse_collective(manifest["policy"]["collective"])
+    tp = int(manifest["tp"])
+    tps = tuple(t for t in (1, tp) if t <= jax.device_count())
+    findings += contracts.lint_collectives(
+        specs=[s.shorthand() for s in coll.specs()], tps=tps)
+    for f in findings:
+        print(f"  {f}")
+    errs = sum(1 for f in findings if f.severity == "error")
+    print(f"verify {args.artifact}: {len(findings)} finding(s), "
+          f"{errs} error(s)")
+    if args.json:
+        with open(args.json, "w") as fh:
+            fh.write(to_json_text(findings))
+    return 1 if has_errors(findings) else 0
+
+
 def main(argv=None):
     import sys
 
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "prepare":
         return prepare(argv[1:])
+    if argv and argv[0] == "verify":
+        return verify(argv[1:])
 
     ap = argparse.ArgumentParser()
     _plan_args(ap)

@@ -137,7 +137,7 @@ def _expert_ffn_local(cfg: ModelConfig, experts, xs, tp_axis: str,
     else:
         h = act(h)
     y = jnp.einsum("ecf,efd->ecd", h, experts["w_down"].astype(xs.dtype))
-    return jax.lax.psum(y, tp_axis)
+    return comm_dispatch.raw_psum(y, tp_axis)
 
 
 def moe_forward_ep(cfg: ModelConfig, p, x, ctx: ParallelContext):
@@ -176,12 +176,12 @@ def moe_forward_ep(cfg: ModelConfig, p, x, ctx: ParallelContext):
         xt = x_l.reshape(bl * sl, d)
         buf, combine, _aux = _dispatch_local(cfg, xt, router, cap)
         # (E, cap, d) -> (E/D, D*cap, d): tokens travel to expert owners
-        buf = jax.lax.all_to_all(buf, dp, split_axis=0, concat_axis=1,
-                                 tiled=True)
+        buf = comm_dispatch.all_to_all(buf, dp, split_axis=0,
+                                       concat_axis=1)
         out = _expert_ffn_local(cfg, experts_l, buf, tp, pol)
         # (E/D, D*cap, d) -> (E, cap, d): results travel home
-        out = jax.lax.all_to_all(out, dp, split_axis=1, concat_axis=0,
-                                 tiled=True)
+        out = comm_dispatch.all_to_all(out, dp, split_axis=1,
+                                       concat_axis=0)
         return combine(out).reshape(bl, sl, d)
 
     y = compat.shard_map(

@@ -31,6 +31,16 @@ SUPPORTS_ATTN_VO = True
 #: (n_super, n_self) decoder self-attention dicts under.
 ATTN_VO_PATH = "super.self.attn"
 
+#: folds the plan compiler produces but this runtime deliberately does
+#: NOT consume, with the reason — ``repro.analysis`` (MF005) reports
+#: these as waived instead of flagging them as dead aux weight.
+ATTN_VO_WAIVED = {
+    "super.cross.xattn": (
+        "cross-attention K/V is precomputed from raw wv at prefill "
+        "(precompute_cross); a folded V would disagree with the cached "
+        "values"),
+}
+
 
 def _self_vo(aux):
     """The stacked (ns, nself) V->O ``PlannedPair`` for the decoder self

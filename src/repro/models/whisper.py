@@ -16,6 +16,36 @@ from repro.models import common as cm
 from repro.models.common import ParallelContext
 
 
+#: decoder self-attention consumes precompiled V->O folds (artifact aux
+#: plans) — the registry only forwards ``aux`` to modules declaring it.
+SUPPORTS_ATTN_VO = True
+
+#: dotted path ``stage_fold_attention`` records the stacked decoder
+#: self-attention dicts under.
+ATTN_VO_PATH = "dec_layers.attn"
+
+#: folds the plan compiler produces but this runtime deliberately does
+#: NOT consume, with the reason — ``repro.analysis`` (MF005) reports
+#: these as waived instead of flagging them as dead aux weight.
+ATTN_VO_WAIVED = {
+    "dec_layers.xattn": (
+        "cross-attention K/V is precomputed from raw wv at prefill "
+        "(precompute_cross); a folded V would disagree with the cached "
+        "values"),
+    "enc_layers.attn": (
+        "encoder runs once at prefill through GSPMD; the fold targets "
+        "the per-token decode path"),
+}
+
+
+def _dec_vo(aux):
+    """The stacked (num_layers,) V->O ``PlannedPair`` for the decoder
+    self-attention layers, if the artifact carried one."""
+    if not aux:
+        return None
+    return (aux.get("attn_plans") or {}).get(ATTN_VO_PATH)
+
+
 def _sinusoid(seq: int, d: int):
     pos = jnp.arange(seq)[:, None].astype(jnp.float32)
     dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
@@ -103,7 +133,8 @@ def encode(cfg: ModelConfig, params, frames, ctx: ParallelContext):
 def _dec_layer(cfg, ctx):
     def body(x, lp, enc):
         h = cm.attention_forward(cfg, lp["attn"],
-                                 cm.apply_norm(cfg, lp["ln1"], x), ctx)
+                                 cm.apply_norm(cfg, lp["ln1"], x), ctx,
+                                 vo=lp.get("attn_vo"))
         x = x + h
         h = cm.attention_forward(cfg, lp["xattn"],
                                  cm.apply_norm(cfg, lp["lnx"], x), ctx,
@@ -116,13 +147,19 @@ def _dec_layer(cfg, ctx):
 
 
 def forward(cfg: ModelConfig, params, batch, ctx: ParallelContext, *,
-            window=None):
+            window=None, aux=None):
     """batch: {"tokens": (B, S), "frames": (B, enc_seq, d)} -> logits."""
     enc = encode(cfg, params, batch["frames"], ctx)
     tok = batch["tokens"]
     x = cm.embed_tokens(cfg, params["embed"], tok, ctx)
     x = x + _sinusoid(tok.shape[1], cfg.d_model).astype(x.dtype)
-    x = cm.scan_layers(_dec_layer(cfg, ctx), x, params["dec_layers"], ctx,
+    dec = params["dec_layers"]
+    vo = _dec_vo(aux)
+    if vo is not None:
+        # rides the decoder scan next to the layer params; the body
+        # picks it up as lp["attn_vo"]
+        dec = dict(dec, attn_vo=vo)
+    x = cm.scan_layers(_dec_layer(cfg, ctx), x, dec, ctx,
                        extra=enc)
     x = cm.apply_norm(cfg, params["final_norm"], x)
     return cm.lm_head(cfg, params["embed"], x, ctx)
@@ -179,7 +216,7 @@ def precompute_cross(cfg: ModelConfig, params, enc, ctx: ParallelContext):
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
-                ctx: ParallelContext, *, window=None, pages=None):
+                ctx: ParallelContext, *, window=None, pages=None, aux=None):
     x = cm.embed_tokens(cfg, params["embed"], tokens[:, None], ctx)
     d = cfg.d_model
     pos_emb = _sinusoid(cfg.max_target_positions or 448, d)
@@ -195,7 +232,8 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
         lp, (lc, xk, xv) = xs
         h, nc = cm.attention_decode(cfg, lp["attn"],
                                     cm.apply_norm(cfg, lp["ln1"], x),
-                                    lc, pos, ctx, window=window, pages=pages)
+                                    lc, pos, ctx, window=window, pages=pages,
+                                    vo=lp.get("attn_vo"))
         x = x + h
         # cross-attn against precomputed encoder K/V
         xa = lp["xattn"]
@@ -210,8 +248,12 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
         return (x + h).astype(carry_dtype), nc
 
     carry_dtype = x.dtype
+    dec = params["dec_layers"]
+    vo = _dec_vo(aux)
+    if vo is not None:
+        dec = dict(dec, attn_vo=vo)
     x, ncache = jax.lax.scan(
-        body, x, (params["dec_layers"],
+        body, x, (dec,
                   (cache["self"], cache["cross_k"], cache["cross_v"])))
     x = cm.apply_norm(cfg, params["final_norm"], x)
     logits = cm.lm_head(cfg, params["embed"], x, ctx)

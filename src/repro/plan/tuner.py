@@ -161,14 +161,19 @@ def _probe_site(pp, tp: int, rng, calib_batch: int, candidates,
     for spec in candidates:
         sim = simulate_wire(partials, spec)
         err = float(jnp.max(jnp.abs(sim - exact))) / max(scale, 1e-30)
+        # can the fused wire-epilogue kernel serve this site's down
+        # GEMM? (per-rank shard geometry, so probe the shard) — keep the
+        # verdict AND the reason: the manifest records this eligibility
+        # provenance and repro.analysis cross-checks ':fused' marks
+        # against it offline
+        fusable, why = kdispatch.wire_support(shards[0].down, spec, tp)
         scores[spec.shorthand()] = {
             "spec": spec,
             "rel_err": err,
             # per-token wire bytes (batch-independent ranking)
             "bytes_per_token": spec.bytes_on_wire((1, pp.n2), tp),
-            # can the fused wire-epilogue kernel serve this site's down
-            # GEMM? (per-rank shard geometry, so probe the shard)
-            "fusable": kdispatch.supports_wire(shards[0].down, spec, tp),
+            "fusable": fusable,
+            "fuse_reason": why,
         }
     return scores
 
@@ -249,10 +254,27 @@ def autotune_collectives(state, mesh=None, *,
                     # the next microbatch's GEMM (see docstring)
                     chosen = chosen.with_(overlap=True)
         entries.append((path, chosen))
+        # eligibility provenance: WHY this site may (or may not) carry a
+        # ':fused' wire epilogue, re-derivable offline from the shard on
+        # disk — repro.analysis.manifest_lint cross-checks the mark
+        # against this record and against kernels.dispatch.wire_support.
+        if tp == 1:
+            elig = {"fusable": False, "reason": status}
+        elif kind != "pair":
+            elig = {"fusable": False,
+                    "reason": "attn_vo epilogue closes through GSPMD"}
+        else:
+            base = scores.get(chosen.shorthand()) or scores.get(
+                chosen.with_(fused=False, overlap=False).shorthand())
+            elig = ({"fusable": base["fusable"],
+                     "reason": base["fuse_reason"]}
+                    if base is not None
+                    else {"fusable": False, "reason": status})
         report.append({
             "path": path, "kind": kind, "tp": tp, "budget": budget,
             "status": status, "chosen": chosen.shorthand(),
             "fused": chosen.fused, "overlap": chosen.overlap,
+            "eligibility": elig,
             "candidates": {
                 short: {"rel_err": v["rel_err"],
                         "bytes_per_token": v["bytes_per_token"]}
